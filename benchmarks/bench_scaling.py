@@ -1,0 +1,69 @@
+"""Paper Fig. 5/6 analogue: scaling behaviour.
+
+Core-count scaling is not measurable on this 1-core container, so we verify
+the two *algorithmic* scaling claims that core scaling rests on:
+
+  1. O(N log N) gradient step: fit the growth exponent of step time vs N —
+     BH must stay near ~1 (vs 2 for the exact method);
+  2. traversal work per point grows ~log N (the quadtree is doing its job);
+  3. device-count scaling of the distributed step is exercised functionally
+     in tests/test_distributed.py (emulated devices share this one core, so
+     wall-clock parallel efficiency is not meaningful here).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import build_tree, emit, time_fn
+from repro.core import exact
+from repro.core.repulsive import bh_repulsion_sorted
+from repro.core.summarize import summarize
+
+
+@jax.jit
+def _bh_step(y):
+    cent, r, codes, cs, ys, perm, tree = _build(y)
+    summ = summarize(tree, ys, r)
+    rep = bh_repulsion_sorted(ys, tree, summ, 0.5)
+    return rep.force, rep.steps
+
+
+def _build(y):
+    from repro.core import morton, quadtree
+    cent, r = morton.span_radius(y)
+    codes = morton.morton_encode(y, cent, r)
+    cs, ys, perm = quadtree.sort_points_by_code(y, codes)
+    tree = quadtree.build_quadtree(cs)
+    return cent, r, codes, cs, ys, perm, tree
+
+
+def run(sizes=(2000, 4000, 8000, 16000, 32000), exact_cap: int = 8000):
+    rng = np.random.default_rng(0)
+    bh_times, ex_times, trav = [], [], []
+    for n in sizes:
+        y = jnp.asarray(rng.normal(size=(n, 2)).astype(np.float32))
+        t = time_fn(lambda yy=y: _bh_step(yy)[0], iters=3)
+        steps = np.asarray(_bh_step(y)[1])
+        bh_times.append(t)
+        trav.append(steps.mean())
+        emit(f"scaling_bh_step_n{n}", t, f"mean_traversal={steps.mean():.0f}")
+        if n <= exact_cap:
+            te = time_fn(lambda yy=y: exact.exact_repulsion(yy)[0], iters=2)
+            ex_times.append((n, te))
+            emit(f"scaling_exact_step_n{n}", te, "")
+
+    ln = np.log(np.asarray(sizes, np.float64))
+    bh_slope = np.polyfit(ln, np.log(bh_times), 1)[0]
+    emit("scaling_bh_exponent", 0.0, f"t ~ N^{bh_slope:.2f} (target ~1, exact=2)")
+    if len(ex_times) >= 2:
+        en = np.log([e[0] for e in ex_times])
+        ev = np.log([e[1] for e in ex_times])
+        ex_slope = np.polyfit(en, ev, 1)[0]
+        emit("scaling_exact_exponent", 0.0, f"t ~ N^{ex_slope:.2f}")
+    # traversal growth ~ log N: ratio of means across a 16x N range
+    emit("scaling_traversal_growth", 0.0,
+         f"mean_traversal {trav[0]:.0f} -> {trav[-1]:.0f} over {sizes[0]}->{sizes[-1]} pts")

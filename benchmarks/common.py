@@ -1,0 +1,56 @@
+"""Shared benchmark utilities: timing, CSV emission, fixture construction."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bsp, morton, quadtree
+from repro.core.knn import knn
+from repro.core.similarity import symmetrize_ell
+from repro.data.datasets import make_dataset
+
+ROWS: list[tuple[str, float, str]] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def time_fn(fn, *args, warmup: int = 1, iters: int = 5, **kw) -> float:
+    """Median wall time (us) of a blocking call."""
+    for _ in range(warmup):
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times) * 1e6)
+
+
+def tsne_fixture(n: int, dim: int = 20, perplexity: float = 30.0, seed: int = 0):
+    """KNN+BSP+sym P and a mid-optimization embedding for step benchmarks."""
+    x, labels = make_dataset("mouse_1p3m", n=n, seed=seed)
+    x = x[:, :dim]
+    k = int(3 * perplexity)
+    idx, d2 = knn(jnp.asarray(x), k)
+    cond_p, _ = bsp.binary_search_perplexity(d2, perplexity)
+    cols, vals = symmetrize_ell(idx, cond_p)
+    rng = np.random.default_rng(seed)
+    y = jnp.asarray(rng.normal(size=(n, 2)).astype(np.float32))
+    return dict(x=x, labels=labels, idx=idx, d2=d2, cond_p=cond_p,
+                cols=jnp.asarray(cols), vals=jnp.asarray(vals, jnp.float32), y=y)
+
+
+def build_tree(y, depth=16, compress=True):
+    cent, r = morton.span_radius(y)
+    codes = morton.morton_encode(y, cent, r, depth=depth)
+    cs, ys, perm = quadtree.sort_points_by_code(y, codes)
+    tree = quadtree.build_quadtree(cs, depth=depth, compress=compress)
+    return cent, r, codes, cs, ys, perm, tree

@@ -1,0 +1,93 @@
+"""Roofline report: reads the dry-run JSONs and prints the per-cell
+three-term analysis (EXPERIMENTS.md §Roofline).
+
+    PYTHONPATH=src python -m benchmarks.roofline [--dir runs/dryrun]
+                                                 [--mesh pod256] [--markdown]
+
+Terms (v5e: 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s/link ICI):
+    compute_s    = HLO_FLOPs(global)        / (chips * peak)
+    memory_s     = HLO_bytes(global)        / (chips * hbm_bw)
+    collective_s = collective_bytes(global) / (chips * link_bw)
+cost_analysis() is per-device on the SPMD module, so global/chips == the
+per-device quantity used directly against per-chip rates.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+from repro.configs import ARCH_IDS, SHAPES
+
+
+def load(dir_: pathlib.Path, mesh: str):
+    cells = {}
+    for f in sorted(dir_.glob(f"*__{mesh}.json")):
+        r = json.loads(f.read_text())
+        cells[(r["arch"], r["shape"])] = r
+    return cells
+
+
+def fmt_s(x):
+    if x is None:
+        return "-"
+    if x >= 1.0:
+        return f"{x:8.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:7.2f}ms"
+    return f"{x*1e6:7.1f}us"
+
+
+def report(dir_: str = "runs/dryrun", mesh: str = "pod256", markdown: bool = False):
+    cells = load(pathlib.Path(dir_), mesh)
+    sep = "|" if markdown else "  "
+    hdr = ["arch", "shape", "compute", "memory", "collective", "bound",
+           "model_TF", "hlo_TF", "useful", "MFU@bound"]
+    if markdown:
+        print("| " + " | ".join(hdr) + " |")
+        print("|" + "---|" * len(hdr))
+    else:
+        print(f"{'arch':24s} {'shape':12s} {'compute':>10s} {'memory':>10s} "
+              f"{'collective':>10s} {'bound':>10s} {'model_TF':>9s} {'hlo_TF':>9s} "
+              f"{'useful':>7s} {'MFU@bound':>9s}")
+    rows = []
+    for arch in ARCH_IDS:
+        for shape in SHAPES:
+            r = cells.get((arch, shape))
+            if r is None:
+                continue
+            if r.get("skipped"):
+                row = [arch, shape, "-", "-", "-", "skipped", "-", "-", "-", "-"]
+            elif not r.get("ok"):
+                row = [arch, shape, "-", "-", "-", "FAILED", "-", "-", "-", "-"]
+            else:
+                roof = r["roofline"]
+                mf = roof.get("model_flops") or 0.0
+                hf = roof.get("hlo_flops_global") or 0.0
+                useful = f"{mf/hf:5.2f}" if hf else "-"
+                # achievable MFU if perfectly overlapped = compute / bound time
+                mfu = roof["compute_s"] / roof["bound_time_s"] * (mf / hf if hf else 1.0)
+                row = [arch, shape, fmt_s(roof["compute_s"]), fmt_s(roof["memory_s"]),
+                       fmt_s(roof["collective_s"]), roof["dominant"],
+                       f"{mf/1e12:9.1f}", f"{hf/1e12:9.1f}", useful, f"{mfu:8.1%}"]
+            rows.append(row)
+            if markdown:
+                print("| " + " | ".join(str(c) for c in row) + " |")
+            else:
+                print(f"{row[0]:24s} {row[1]:12s} {row[2]:>10s} {row[3]:>10s} "
+                      f"{row[4]:>10s} {row[5]:>10s} {row[6]:>9s} {row[7]:>9s} "
+                      f"{row[8]:>7s} {row[9]:>9s}")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="runs/dryrun")
+    ap.add_argument("--mesh", default="pod256", choices=["pod256", "pod512"])
+    ap.add_argument("--markdown", action="store_true")
+    args = ap.parse_args()
+    report(args.dir, args.mesh, args.markdown)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Benchmark harness — one bench per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--bench steps,e2e,accuracy,scaling]
+                                            [--quick] [--n N] [--scale S]
+
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks.common.emit).
+Paper mapping: steps -> Tables 5/6; e2e -> Table 4 / Fig 4; accuracy ->
+Table 3; scaling -> Fig 5/6 (algorithmic form — see bench_scaling docstring).
+Roofline reporting lives in benchmarks/roofline.py (reads dry-run JSON).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bench", default="steps,accuracy,scaling,e2e")
+    ap.add_argument("--quick", action="store_true", help="small sizes (CI)")
+    ap.add_argument("--n", type=int, default=None, help="points for step bench")
+    ap.add_argument("--scale", type=float, default=None, help="e2e dataset scale")
+    args = ap.parse_args()
+    benches = [b.strip() for b in args.bench.split(",") if b.strip()]
+    t0 = time.time()
+    print("name,us_per_call,derived")
+
+    if "steps" in benches:
+        from benchmarks import bench_steps
+        bench_steps.run(n=args.n or (4000 if args.quick else 20000))
+    if "accuracy" in benches:
+        from benchmarks import bench_accuracy
+        bench_accuracy.run(n=600 if args.quick else 1500,
+                           n_iter=120 if args.quick else 300)
+    if "scaling" in benches:
+        from benchmarks import bench_scaling
+        sizes = (1000, 2000, 4000) if args.quick else (2000, 4000, 8000, 16000, 32000)
+        bench_scaling.run(sizes=sizes, exact_cap=2000 if args.quick else 8000)
+    if "e2e" in benches:
+        from benchmarks import bench_e2e
+        bench_e2e.run(n_iter=60 if args.quick else 250,
+                      scale=args.scale or (0.15 if args.quick else 1.0))
+
+    print(f"# total_bench_wall_s,{time.time() - t0:.1f},", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

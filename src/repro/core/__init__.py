@@ -1,0 +1,21 @@
+"""Core Barnes-Hut t-SNE library (the paper's contribution, in JAX)."""
+from repro.core.morton import morton_encode, span_radius, DEFAULT_DEPTH
+from repro.core.quadtree import build_quadtree, sort_points_by_code, LinearQuadtree
+from repro.core.summarize import summarize, TreeSummary
+from repro.core.repulsive import bh_repulsion_sorted, RepulsionResult
+from repro.core.attractive import attractive_forces_ell, attractive_forces_edges
+from repro.core.bsp import binary_search_perplexity, perplexity_of
+from repro.core.knn import knn
+from repro.core.tsne import TsneConfig, TsneResult, run_tsne, bh_gradient, tsne_step, preprocess, init_state
+
+__all__ = [
+    "morton_encode", "span_radius", "DEFAULT_DEPTH",
+    "build_quadtree", "sort_points_by_code", "LinearQuadtree",
+    "summarize", "TreeSummary",
+    "bh_repulsion_sorted", "RepulsionResult",
+    "attractive_forces_ell", "attractive_forces_edges",
+    "binary_search_perplexity", "perplexity_of",
+    "knn",
+    "TsneConfig", "TsneResult", "run_tsne", "bh_gradient", "tsne_step",
+    "preprocess", "init_state",
+]

@@ -1,0 +1,151 @@
+"""Distributed Barnes-Hut t-SNE (shard_map) + ring KNN.
+
+Distribution strategy (DESIGN.md §5): *points are sharded, the tree is
+replicated*.  Y is tiny (N x 2) next to the per-point work, so every shard
+all-gathers the embedding, rebuilds the (identical) Morton quadtree, and
+traverses only its own point slice — the multi-device generalization of the
+paper's thread-parallel repulsion, with the same attractive/BSP row
+parallelism.  Z and the KL terms are psum'd.
+
+The KNN is a collective_permute ring: each shard keeps its query slice and
+streams database shards around the ring, merging running top-k per hop —
+the transfer of hop t+1 overlaps the distance matmul of hop t.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.core import attractive, morton, quadtree
+from repro.core._pairwise import pairwise_sq_dists
+from repro.core.repulsive import bh_repulsion_sorted
+from repro.core.summarize import summarize
+from repro.core.tsne import GradResult
+
+
+def _local_bh_gradient(y_loc, p_cols, p_vals, p_logp, *, axis, theta, exaggeration, depth):
+    """shard_map body: y_loc [n_loc, 2]; P rows for the local points."""
+    n_loc = y_loc.shape[0]
+    rank = jax.lax.axis_index(axis)
+    y_full = jax.lax.all_gather(y_loc, axis, tiled=True)          # [N, 2]
+    n = y_full.shape[0]
+
+    # replicated tree build (steps 3-4)
+    cent, r_span = morton.span_radius(y_full)
+    codes = morton.morton_encode(y_full, cent, r_span, depth=depth)
+    codes_s, y_s, perm = quadtree.sort_points_by_code(y_full, codes)
+    tree = quadtree.build_quadtree(codes_s, depth=depth)
+    summ = summarize(tree, y_s, r_span)
+
+    # local slice of sorted positions (inverse permutation of our indices)
+    inv = jnp.zeros((n,), jnp.int32).at[perm].set(jnp.arange(n, dtype=jnp.int32))
+    my_pos = inv[rank * n_loc + jnp.arange(n_loc, dtype=jnp.int32)]
+
+    # repulsion for local points only (step 6)
+    theta2 = jnp.asarray(theta, y_loc.dtype) ** 2
+    n_nodes = tree.n_nodes
+    cap = tree.capacity
+    is_leaf = tree.is_leaf
+
+    def traverse(p, yp):
+        def cond(state):
+            return state[0] < n_nodes
+
+        def body(state):
+            ptr, force, z = state
+            kk = jnp.minimum(ptr, cap - 1)
+            s, e = tree.start[kk], tree.end[kk]
+            cnt = summ.count[kk]
+            inside = (s <= p) & (p < e)
+            cnt_eff = cnt - jnp.where(inside, 1.0, 0.0)
+            sum_eff = summ.sum_y[kk] - jnp.where(inside, yp, jnp.zeros_like(yp))
+            com = sum_eff / jnp.maximum(cnt_eff, 1.0)
+            diff = yp - com
+            d2 = jnp.sum(diff * diff)
+            side = summ.side[kk]
+            open_ = (~is_leaf[kk]) & (side * side >= theta2 * d2)
+            w = jnp.where(open_, 0.0, cnt_eff)
+            q = 1.0 / (1.0 + d2)
+            return (jnp.where(open_, ptr + 1, tree.skip[kk]),
+                    force + (w * q * q) * diff, z + w * q)
+
+        init = (jnp.int32(0), jnp.zeros((2,), y_loc.dtype), jnp.asarray(0.0, y_loc.dtype))
+        _, force, z = jax.lax.while_loop(cond, body, init)
+        return force, z
+
+    f_rep, z_loc = jax.vmap(traverse)(my_pos, y_loc)
+    z = jnp.maximum(jax.lax.psum(jnp.sum(z_loc), axis), 1e-30)
+
+    # attractive for local rows (step 5) — cols are global indices
+    yj = y_full[p_cols]
+    diff = y_loc[:, None, :] - yj
+    d2 = jnp.sum(diff * diff, axis=-1)
+    pq = p_vals / (1.0 + d2)
+    f_attr = jnp.sum(pq[..., None] * diff, axis=1)
+    kl_attr = jax.lax.psum(jnp.sum(p_vals * jnp.log1p(d2)), axis)
+
+    grad = 4.0 * (jnp.asarray(exaggeration, y_loc.dtype) * f_attr - f_rep / z)
+    kl = p_logp + kl_attr + jnp.log(z)
+    return grad, kl, z
+
+
+def distributed_bh_gradient(mesh, y, p_cols, p_vals, p_logp, *,
+                            theta: float, exaggeration: float, depth: int = 16,
+                            axis: str = "data") -> GradResult:
+    """y [N,2] / p_cols, p_vals [N,K] sharded over ``axis`` (row-wise)."""
+    fn = functools.partial(_local_bh_gradient, axis=axis, theta=theta,
+                           exaggeration=exaggeration, depth=depth)
+    grad, kl, z = shard_map(
+        fn, mesh=mesh,
+        in_specs=(P(axis), P(axis), P(axis), P()),
+        out_specs=(P(axis), P(), P()),
+        check_vma=False,
+    )(y, p_cols, p_vals, p_logp)
+    return GradResult(grad=grad, kl=kl, z=z, max_traversal=jnp.int32(0))
+
+
+# ---------------------------------------------------------------------------
+# ring KNN
+# ---------------------------------------------------------------------------
+
+def ring_knn(mesh, x, k: int, axis: str = "data"):
+    """Exact distributed KNN: x [N, D] sharded row-wise over ``axis``.
+
+    Returns (idx [N,k] int32 global indices, d2 [N,k]), sharded like x.
+    Each hop overlaps the next shard transfer (collective_permute) with the
+    current distance tile (MXU matmul + top-k merge).
+    """
+    n_dev = mesh.shape[axis]
+
+    def body(xq):
+        n_loc = xq.shape[0]
+        rank = jax.lax.axis_index(axis)
+        big = jnp.asarray(jnp.finfo(xq.dtype).max, xq.dtype)
+        q_idx = rank * n_loc + jnp.arange(n_loc, dtype=jnp.int32)
+        perm = [(i, (i + 1) % n_dev) for i in range(n_dev)]
+
+        def hop(carry, t):
+            chunk, owner, best_d, best_i = carry
+            # kick off the next transfer, then compute on the current chunk
+            nxt = jax.lax.ppermute(chunk, axis, perm)
+            nxt_owner = (owner - 1) % n_dev
+            d2 = pairwise_sq_dists(xq, chunk)
+            col = owner * n_loc + jnp.arange(n_loc, dtype=jnp.int32)
+            d2 = jnp.where(col[None, :] == q_idx[:, None], big, d2)
+            cat_d = jnp.concatenate([best_d, d2], axis=1)
+            cat_i = jnp.concatenate(
+                [best_i, jnp.broadcast_to(col[None, :], d2.shape)], axis=1)
+            neg, arg = jax.lax.top_k(-cat_d, k)
+            return (nxt, nxt_owner, -neg, jnp.take_along_axis(cat_i, arg, axis=1)), None
+
+        init = (xq, rank, jnp.full((n_loc, k), big, xq.dtype),
+                jnp.full((n_loc, k), -1, jnp.int32))
+        (chunk, _, best_d, best_i), _ = jax.lax.scan(hop, init, jnp.arange(n_dev))
+        return best_i, jnp.maximum(best_d, 0.0)
+
+    return shard_map(body, mesh=mesh, in_specs=P(axis),
+                     out_specs=(P(axis), P(axis)), check_vma=False)(x)

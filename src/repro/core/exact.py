@@ -1,0 +1,47 @@
+"""Exact O(N^2) t-SNE quantities — the correctness oracle for every
+approximated step (Barnes-Hut repulsion, sparse attraction, KL estimate)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def exact_repulsion(y: jax.Array):
+    """Returns (force_unnorm [N,2], Z) with
+    force_unnorm_i = sum_{j!=i} (1+d^2)^-2 (y_i - y_j),  Z = sum_{k!=l} (1+d^2)^-1."""
+    diff = y[:, None, :] - y[None, :, :]
+    d2 = jnp.sum(diff * diff, axis=-1)
+    w = 1.0 / (1.0 + d2)
+    w = w - jnp.diag(jnp.diag(w))          # zero self terms
+    z = jnp.sum(w)
+    force = jnp.sum((w * w)[..., None] * diff, axis=1)
+    return force, z
+
+
+def exact_attraction(y: jax.Array, p_dense: jax.Array):
+    """force_i = sum_j p_ij (1+d^2)^-1 (y_i - y_j); also attractive KL part."""
+    diff = y[:, None, :] - y[None, :, :]
+    d2 = jnp.sum(diff * diff, axis=-1)
+    pq = p_dense / (1.0 + d2)
+    force = jnp.sum(pq[..., None] * diff, axis=1)
+    kl_attr = jnp.sum(p_dense * jnp.log1p(d2))
+    return force, kl_attr
+
+
+def exact_gradient(y: jax.Array, p_dense: jax.Array, exaggeration: float = 1.0):
+    """dC/dy (eq. 6/7): 4 * (exag * F_attr - F_rep / Z)."""
+    fa, _ = exact_attraction(y, p_dense)
+    fr, z = exact_repulsion(y)
+    return 4.0 * (exaggeration * fa - fr / z)
+
+
+def exact_kl(y: jax.Array, p_dense: jax.Array):
+    """KL(P||Q) with Q the normalized Student-t similarities of y."""
+    diff = y[:, None, :] - y[None, :, :]
+    d2 = jnp.sum(diff * diff, axis=-1)
+    w = 1.0 / (1.0 + d2)
+    w = w - jnp.diag(jnp.diag(w))
+    q = w / jnp.sum(w)
+    p = p_dense
+    mask = p > 0
+    return jnp.sum(jnp.where(mask, p * (jnp.log(jnp.maximum(p, 1e-30)) - jnp.log(jnp.maximum(q, 1e-30))), 0.0))

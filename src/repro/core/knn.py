@@ -1,0 +1,88 @@
+"""Exact K-nearest-neighbors (paper §3.1).
+
+The paper reuses daal4py's KNN; we must build the substrate ourselves.  The
+TPU-native formulation is a *blocked brute force*: the query x database
+squared-distance tile is an MXU matmul (`-2 q @ x^T`) plus rank-1 norm
+epilogue (the Pallas kernel in kernels/pairwise_kernel.py), and the top-K is
+a streaming `lax.top_k` merge over database chunks, so the working set stays
+in VMEM-sized tiles.  Exact (not approximate) — matches the paper's accuracy
+claims.  Distributed ring variant lives in core/distributed.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def _pad_to(x: jax.Array, multiple: int, axis: int = 0):
+    n = x.shape[axis]
+    pad = (-n) % multiple
+    if pad == 0:
+        return x, n
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), n
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "block_q", "block_db", "pairwise_fn_name")
+)
+def knn(
+    x: jax.Array,
+    k: int,
+    block_q: int = 512,
+    block_db: int = 2048,
+    pairwise_fn_name: str = "xla",
+):
+    """Exact KNN. Returns (idx [N,k] int32, d2 [N,k]) — self excluded.
+
+    pairwise_fn_name: "xla" (jnp) or "pallas" (kernels.pairwise_kernel).
+    """
+    n, _ = x.shape
+    if k >= n:
+        raise ValueError(f"k={k} must be < n={n}")
+    if pairwise_fn_name == "pallas":
+        from repro.kernels.ops import pairwise_sq_dists as pw
+    else:
+        from repro.core._pairwise import pairwise_sq_dists as pw
+
+    xp, _ = _pad_to(x, block_db, axis=0)
+    n_pad = xp.shape[0]
+    sqn = jnp.sum(xp * xp, axis=1)
+    n_chunks = n_pad // block_db
+
+    qs_pad, _ = _pad_to(x, block_q, axis=0)
+    q_sqn = jnp.sum(qs_pad * qs_pad, axis=1)
+    n_qblocks = qs_pad.shape[0] // block_q
+    big = jnp.asarray(jnp.finfo(x.dtype).max, x.dtype)
+
+    def one_qblock(qb):
+        q = jax.lax.dynamic_slice_in_dim(qs_pad, qb * block_q, block_q)
+        qn = jax.lax.dynamic_slice_in_dim(q_sqn, qb * block_q, block_q)
+        q_idx = qb * block_q + jnp.arange(block_q, dtype=jnp.int32)
+
+        def scan_chunk(carry, c):
+            best_d, best_i = carry
+            db = jax.lax.dynamic_slice_in_dim(xp, c * block_db, block_db)
+            dbn = jax.lax.dynamic_slice_in_dim(sqn, c * block_db, block_db)
+            col = c * block_db + jnp.arange(block_db, dtype=jnp.int32)
+            d2 = pw(q, db, qn, dbn)                       # [block_q, block_db]
+            invalid = (col[None, :] >= n) | (col[None, :] == q_idx[:, None])
+            d2 = jnp.where(invalid, big, d2)
+            cat_d = jnp.concatenate([best_d, d2], axis=1)
+            cat_i = jnp.concatenate(
+                [best_i, jnp.broadcast_to(col[None, :], d2.shape)], axis=1
+            )
+            neg_top, argtop = jax.lax.top_k(-cat_d, k)
+            return (-neg_top, jnp.take_along_axis(cat_i, argtop, axis=1)), None
+
+        init = (jnp.full((block_q, k), big, x.dtype), jnp.full((block_q, k), -1, jnp.int32))
+        (best_d, best_i), _ = jax.lax.scan(scan_chunk, init, jnp.arange(n_chunks))
+        return best_d, best_i
+
+    best_d, best_i = jax.lax.map(one_qblock, jnp.arange(n_qblocks))
+    best_d = best_d.reshape(-1, k)[:n]
+    best_i = best_i.reshape(-1, k)[:n]
+    return best_i, jnp.maximum(best_d, 0.0)

@@ -1,0 +1,136 @@
+"""Jittable linear quadtree built from sorted Morton codes.
+
+This is the TPU-native reformulation of the paper's §3.3 "Parallel Quadtree
+Building".  The CPU version builds pointer-based nodes with subtree-parallel
+threads; here the *entire* build is a fixed-shape data-parallel pipeline:
+
+  1. sort Morton codes (one O(N log N) sort, each point touched once — the
+     paper's headline improvement over daal4py's per-level re-partitioning);
+  2. for every level L, run boundaries of the depth-L prefix mark candidate
+     cells; a candidate is a *node* iff its point range differs from the run
+     one level deeper (keeps the deepest cell of every single-child chain —
+     the compressed quadtree, <= 2N-1 nodes);
+  3. nodes are emitted directly in DFS pre-order — flattening the (point,
+     level) keep-grid point-major/level-minor *is* (start asc, depth asc) =
+     pre-order for a laminar range family — no extra sort needed;
+  4. ``skip`` rope pointers (next node in DFS skipping the subtree) come from
+     one vectorized ``searchsorted`` over the node starts.
+
+The traversal then never chases pointers: ``ptr = open ? ptr+1 : skip[ptr]``.
+
+Node ranges index into the Morton-sorted point order.  Summaries (count,
+center-of-mass) are O(1) per node via prefix sums of the sorted coordinates —
+see summarize.py.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.morton import DEFAULT_DEPTH
+
+
+class LinearQuadtree(NamedTuple):
+    """Fixed-capacity (2N+1 slots) compressed quadtree in DFS pre-order.
+
+    Valid nodes occupy slots [0, n_nodes); the remainder are inert padding
+    with ``start == end == N`` so every vectorized op over slots is harmless.
+    """
+
+    start: jax.Array    # [cap] int32, point-range start (sorted order)
+    end: jax.Array      # [cap] int32, point-range end (exclusive)
+    level: jax.Array    # [cap] int32, tree depth of the cell (root region = 0)
+    skip: jax.Array     # [cap] int32, DFS skip pointer (>= n_nodes terminates)
+    n_nodes: jax.Array  # [] int32
+    depth: int          # static max depth
+
+    @property
+    def count(self) -> jax.Array:
+        return self.end - self.start
+
+    @property
+    def is_leaf(self) -> jax.Array:
+        return self.skip == jnp.arange(self.skip.shape[0], dtype=jnp.int32) + 1
+
+    @property
+    def capacity(self) -> int:
+        return self.start.shape[0]
+
+
+def _run_ends(boundary: jax.Array, n: int) -> jax.Array:
+    """end[i] = index of the next run boundary strictly after i (else n)."""
+    idx = jnp.arange(n, dtype=jnp.int32)
+    t = jnp.where(boundary, idx, jnp.int32(n))
+    # suffix minimum: sm[i] = min(t[i:])
+    sm = jax.lax.cummin(t, axis=0, reverse=True)
+    return jnp.concatenate([sm[1:], jnp.full((1,), n, jnp.int32)])
+
+
+@functools.partial(jax.jit, static_argnames=("depth", "compress"))
+def build_quadtree(
+    sorted_codes: jax.Array, depth: int = DEFAULT_DEPTH, compress: bool = True
+) -> LinearQuadtree:
+    """Build the compressed linear quadtree from *sorted* Morton codes.
+
+    compress=False keeps every per-level run as a node (single-child chains
+    included) — the daal4py-like uncompressed tree used as the benchmark
+    baseline; capacity grows to (depth+1)*N.
+    """
+    n = sorted_codes.shape[0]
+    cap = (2 * n + 1) if compress else ((depth + 1) * n + 1)
+    ends = []
+    bounds = []
+    for lvl in range(depth + 1):
+        if lvl == 0:
+            boundary = jnp.zeros((n,), bool).at[0].set(True)
+        else:
+            pfx = sorted_codes >> jnp.uint32(2 * (depth - lvl))
+            prev = jnp.concatenate([pfx[:1] ^ jnp.uint32(1), pfx[:-1]])
+            boundary = pfx != prev
+            boundary = boundary.at[0].set(True)
+        bounds.append(boundary)
+        ends.append(_run_ends(boundary, n))
+
+    # node keep rule: boundary AND (max depth OR splits at the next level)
+    keeps = []
+    for lvl in range(depth + 1):
+        if lvl == depth or not compress:
+            keeps.append(bounds[lvl])
+        else:
+            keeps.append(bounds[lvl] & (ends[lvl + 1] < ends[lvl]))
+
+    # [N, depth+1] grids flattened point-major => DFS pre-order
+    keep = jnp.stack(keeps, axis=1).reshape(-1)
+    end_flat = jnp.stack(ends, axis=1).reshape(-1)
+    idx = jnp.arange(n, dtype=jnp.int32)
+    start_flat = jnp.broadcast_to(idx[:, None], (n, depth + 1)).reshape(-1)
+    lvl_flat = jnp.broadcast_to(
+        jnp.arange(depth + 1, dtype=jnp.int32)[None, :], (n, depth + 1)
+    ).reshape(-1)
+
+    rank = jnp.cumsum(keep.astype(jnp.int32)) - 1
+    n_nodes = rank[-1] + 1
+    pos = jnp.where(keep, rank, cap)  # cap = trash slot of a (cap+1) array
+
+    def scatter(values, fill):
+        out = jnp.full((cap + 1,), fill, jnp.int32)
+        out = out.at[pos].set(values.astype(jnp.int32), mode="drop")
+        return out[:cap]
+
+    start = scatter(start_flat, n)
+    end = scatter(end_flat, n)
+    level = scatter(lvl_flat, 0)
+
+    # DFS skip pointer: first node whose range starts at/after our end.
+    skip = jnp.searchsorted(start, end, side="left").astype(jnp.int32)
+    return LinearQuadtree(start=start, end=end, level=level, skip=skip,
+                          n_nodes=n_nodes.astype(jnp.int32), depth=depth)
+
+
+def sort_points_by_code(y: jax.Array, codes: jax.Array):
+    """Sort points by Morton code; returns (codes_sorted, y_sorted, perm)."""
+    perm = jnp.argsort(codes)
+    return codes[perm], y[perm], perm

@@ -1,0 +1,43 @@
+"""Summarization (paper §3.4) — per-cell center-of-mass, TPU formulation.
+
+daal4py runs a *sequential* bottom-up pass; the paper parallelizes it level by
+level.  With Morton-sorted points every node is a contiguous range, so the
+center-of-mass of *every* node at *every* level is an O(1) difference of
+coordinate prefix sums — strictly more parallel than level-synchronous
+reduction: one cumsum + one gather, no level barriers at all.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quadtree import LinearQuadtree
+
+
+class TreeSummary(NamedTuple):
+    count: jax.Array      # [cap] float, points per node
+    sum_y: jax.Array      # [cap, 2] coordinate sums per node
+    com: jax.Array        # [cap, 2] centers of mass (safe for empty nodes)
+    side: jax.Array       # [cap] cell side length (2*r_span / 2^level)
+
+
+def summarize(tree: LinearQuadtree, y_sorted: jax.Array, r_span: jax.Array) -> TreeSummary:
+    n = y_sorted.shape[0]
+    # center before the prefix sum: the cumsum error is O(sqrt(N) * eps * |y|),
+    # so removing the mean keeps float32 COMs accurate even at N ~ 1e6
+    mu = jnp.mean(y_sorted, axis=0, keepdims=True)
+    yc = y_sorted - mu
+    csum = jnp.concatenate(
+        [jnp.zeros((1, y_sorted.shape[1]), y_sorted.dtype), jnp.cumsum(yc, axis=0)],
+        axis=0,
+    )  # [N+1, 2]
+    start = jnp.clip(tree.start, 0, n)
+    end = jnp.clip(tree.end, 0, n)
+    sum_yc = csum[end] - csum[start]
+    count = (end - start).astype(y_sorted.dtype)
+    com = mu + sum_yc / jnp.maximum(count, 1.0)[:, None]
+    sum_y = sum_yc + count[:, None] * mu
+    side = (2.0 * r_span) * jnp.exp2(-tree.level.astype(y_sorted.dtype))
+    return TreeSummary(count=count, sum_y=sum_y, com=com, side=side.astype(y_sorted.dtype))

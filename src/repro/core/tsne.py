@@ -1,0 +1,276 @@
+"""End-to-end Barnes-Hut t-SNE driver (paper Fig. 1a pipeline).
+
+Pipeline:  KNN -> BSP -> symmetrize P -> gradient descent where every
+iteration rebuilds the Morton quadtree, summarizes it, and evaluates the
+attractive (sparse) + repulsive (Barnes-Hut) forces, with early exaggeration,
+momentum switching and per-dimension gains exactly as in the reference
+implementations the paper benchmarks against (scikit-learn / daal4py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import attractive, bsp, morton, quadtree, similarity
+from repro.core.knn import knn as _knn
+from repro.core.summarize import summarize as _summarize
+from repro.core.repulsive import bh_repulsion_sorted
+
+
+@dataclasses.dataclass(frozen=True)
+class TsneConfig:
+    perplexity: float = 30.0
+    n_iter: int = 1000
+    theta: float = 0.5
+    learning_rate: float | str = "auto"   # 'auto' = max(N / early_exaggeration, 50)
+    early_exaggeration: float = 12.0
+    exaggeration_iters: int = 250
+    momentum_initial: float = 0.5
+    momentum_final: float = 0.8
+    momentum_switch_iter: int = 250
+    min_gain: float = 0.01
+    init_std: float = 1e-4
+    depth: int | str = morton.DEFAULT_DEPTH   # "auto" = morton.auto_depth(N)
+    seed: int = 0
+    dtype: Any = jnp.float32
+    knn_block_q: int = 512
+    knn_block_db: int = 2048
+    use_pallas: bool = False              # route hot loops through Pallas kernels
+    # 'blocked' (cache-blocked Alg.2 — default, §Perf winner) | 'ell'
+    # (plain vectorized) | 'components' (SoA planes) | 'edges' (scatter)
+    attractive_impl: str = "blocked"
+    compress_tree: bool = True            # False = daal4py-like uncompressed tree
+
+    def resolve_lr(self, n: int) -> float:
+        if self.learning_rate == "auto":
+            return max(n / self.early_exaggeration, 50.0)
+        return float(self.learning_rate)
+
+    def n_neighbors(self) -> int:
+        return int(3.0 * self.perplexity)
+
+
+class TsneState(NamedTuple):
+    y: jax.Array
+    velocity: jax.Array
+    gains: jax.Array
+    iteration: jax.Array
+
+
+class GradResult(NamedTuple):
+    grad: jax.Array
+    kl: jax.Array          # KL(P||Q) estimate (exact attractive part, BH Z)
+    z: jax.Array
+    max_traversal: jax.Array
+
+
+# ---------------------------------------------------------------------------
+# One BH gradient evaluation (steps 3-6 of Fig. 1a)
+# ---------------------------------------------------------------------------
+
+def bh_gradient(
+    y: jax.Array,
+    p_cols: jax.Array | None,
+    p_vals: jax.Array | None,
+    edges: tuple[jax.Array, jax.Array, jax.Array] | None,
+    theta: float,
+    exaggeration: jax.Array | float,
+    depth: int,
+    p_logp: jax.Array | float,
+    compress_tree: bool = True,
+    use_pallas: bool = False,
+    attractive_impl: str = "ell",
+) -> GradResult:
+    dtype = y.dtype
+    # --- quadtree building (step 3) ---
+    cent, r_span = morton.span_radius(y)
+    if use_pallas:
+        from repro.kernels.ops import morton_encode as enc
+        codes = enc(y, cent, r_span, depth=depth)
+    else:
+        codes = morton.morton_encode(y, cent, r_span, depth=depth)
+    codes_s, y_s, perm = quadtree.sort_points_by_code(y, codes)
+    tree = quadtree.build_quadtree(codes_s, depth=depth, compress=compress_tree)
+    # --- summarization (step 4) ---
+    summ = _summarize(tree, y_s, r_span)
+    # --- repulsive (step 6) ---
+    rep = bh_repulsion_sorted(y_s, tree, summ, theta)
+    z = jnp.maximum(jnp.sum(rep.z_per_point), 1e-30)
+    f_rep = jnp.zeros_like(y).at[perm].set(rep.force) / z
+    # --- attractive (step 5) ---
+    if edges is not None:
+        f_attr, kl_attr = attractive.attractive_forces_edges(y, *edges)
+    else:
+        if use_pallas:
+            from repro.kernels.ops import attractive_forces_ell as attr_ell
+        elif attractive_impl == "components":
+            attr_ell = attractive.attractive_forces_ell_components
+        elif attractive_impl == "blocked":
+            attr_ell = attractive.attractive_forces_ell_blocked
+        else:
+            attr_ell = attractive.attractive_forces_ell
+        f_attr, kl_attr = attr_ell(y, p_cols, p_vals)
+    grad = 4.0 * (jnp.asarray(exaggeration, dtype) * f_attr - f_rep)
+    kl = p_logp + kl_attr + jnp.log(z)
+    return GradResult(grad=grad, kl=kl, z=z, max_traversal=jnp.max(rep.steps))
+
+
+# ---------------------------------------------------------------------------
+# Gradient-descent update (momentum + gains, scikit-learn/daal4py-compatible)
+# ---------------------------------------------------------------------------
+
+def gd_update(state: TsneState, grad: jax.Array, lr: float, momentum, min_gain: float):
+    same_sign = (grad > 0) == (state.velocity > 0)
+    gains = jnp.where(same_sign, state.gains * 0.8, state.gains + 0.2)
+    gains = jnp.maximum(gains, min_gain)
+    velocity = momentum * state.velocity - lr * gains * grad
+    y = state.y + velocity
+    y = y - jnp.mean(y, axis=0, keepdims=True)
+    return TsneState(y=y, velocity=velocity, gains=gains, iteration=state.iteration + 1)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("theta", "depth", "lr", "min_gain", "compress_tree",
+                     "use_pallas", "has_edges", "attractive_impl"),
+)
+def tsne_step(
+    state: TsneState,
+    p_cols,
+    p_vals,
+    edge_src,
+    edge_dst,
+    edge_w,
+    exaggeration,
+    momentum,
+    p_logp,
+    *,
+    theta: float,
+    depth: int,
+    lr: float,
+    min_gain: float,
+    compress_tree: bool,
+    use_pallas: bool,
+    has_edges: bool,
+    attractive_impl: str = "ell",
+):
+    edges = (edge_src, edge_dst, edge_w) if has_edges else None
+    res = bh_gradient(
+        state.y, p_cols, p_vals, edges, theta, exaggeration, depth, p_logp,
+        compress_tree=compress_tree, use_pallas=use_pallas,
+        attractive_impl=attractive_impl,
+    )
+    new_state = gd_update(state, res.grad, lr, momentum, min_gain)
+    return new_state, res.kl, res.max_traversal
+
+
+# ---------------------------------------------------------------------------
+# Full pipeline
+# ---------------------------------------------------------------------------
+
+class TsneResult(NamedTuple):
+    y: np.ndarray
+    kl: float
+    kl_history: np.ndarray
+    timings: dict
+
+
+def preprocess(x: jax.Array, config: TsneConfig):
+    """KNN + BSP + symmetrization; returns the sparse-P operands."""
+    k = config.n_neighbors()
+    t0 = time.perf_counter()
+    idx, d2 = _knn(
+        x.astype(config.dtype), k,
+        block_q=config.knn_block_q, block_db=config.knn_block_db,
+        pairwise_fn_name="pallas" if config.use_pallas else "xla",
+    )
+    idx.block_until_ready()
+    t_knn = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    cond_p, _ = bsp.binary_search_perplexity(d2, config.perplexity)
+    cond_p.block_until_ready()
+    t_bsp = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    if config.attractive_impl == "edges":
+        src, dst, w = similarity.edge_list(idx, cond_p)
+        operands = dict(edges=(src, dst, w), p_cols=None, p_vals=None)
+        total_p = 2.0 * jnp.sum(w)
+        w_sym = jnp.concatenate([w, w]) / total_p * 2.0  # ordered-pair weights
+        p_logp = jnp.sum(jnp.where(w > 0, 2 * (w / total_p) * jnp.log(jnp.maximum(w / total_p, 1e-30)), 0.0))
+        # note: edge-list p_logp is approximate when mutual edges overlap; the
+        # exact Sum p log p only shifts KL by a constant — forces unaffected.
+    else:
+        sym_cols, sym_vals = similarity.symmetrize_ell(idx, cond_p)
+        sym_vals = sym_vals / sym_vals.sum()
+        p_cols = jnp.asarray(sym_cols)
+        p_vals = jnp.asarray(sym_vals, config.dtype)
+        operands = dict(edges=None, p_cols=p_cols, p_vals=p_vals)
+        pv = np.asarray(sym_vals)
+        p_logp = float((pv[pv > 0] * np.log(pv[pv > 0])).sum())
+    t_sym = time.perf_counter() - t0
+    return operands, jnp.asarray(p_logp, config.dtype), dict(knn=t_knn, bsp=t_bsp, symmetrize=t_sym)
+
+
+def init_state(n: int, config: TsneConfig) -> TsneState:
+    key = jax.random.PRNGKey(config.seed)
+    y0 = config.init_std * jax.random.normal(key, (n, 2), dtype=config.dtype)
+    return TsneState(
+        y=y0,
+        velocity=jnp.zeros_like(y0),
+        gains=jnp.ones_like(y0),
+        iteration=jnp.zeros((), jnp.int32),
+    )
+
+
+def run_tsne(
+    x,
+    config: TsneConfig = TsneConfig(),
+    callback: Callable[[int, float], None] | None = None,
+    kl_every: int = 50,
+) -> TsneResult:
+    x = jnp.asarray(x, config.dtype)
+    n = x.shape[0]
+    lr = config.resolve_lr(n)
+    operands, p_logp, timings = preprocess(x, config)
+    state = init_state(n, config)
+
+    has_edges = operands["edges"] is not None
+    e = operands["edges"] or (jnp.zeros((1,), jnp.int32),) * 2 + (jnp.zeros((1,), config.dtype),)
+    depth = morton.auto_depth(n) if config.depth == "auto" else config.depth
+    step_kw = dict(
+        theta=config.theta, depth=depth, lr=lr, min_gain=config.min_gain,
+        compress_tree=config.compress_tree, use_pallas=config.use_pallas,
+        has_edges=has_edges, attractive_impl=config.attractive_impl,
+    )
+    kl_hist = []
+    t0 = time.perf_counter()
+    kl = jnp.asarray(jnp.nan)
+    for it in range(config.n_iter):
+        exag = config.early_exaggeration if it < config.exaggeration_iters else 1.0
+        mom = config.momentum_initial if it < config.momentum_switch_iter else config.momentum_final
+        state, kl, _ = tsne_step(
+            state, operands["p_cols"], operands["p_vals"], e[0], e[1], e[2],
+            jnp.asarray(exag, config.dtype), jnp.asarray(mom, config.dtype), p_logp,
+            **step_kw,
+        )
+        if (it + 1) % kl_every == 0 or it == config.n_iter - 1:
+            kl_val = float(kl)
+            kl_hist.append((it + 1, kl_val))
+            if callback is not None:
+                callback(it + 1, kl_val)
+    state.y.block_until_ready()
+    timings["gradient_descent"] = time.perf_counter() - t0
+    return TsneResult(
+        y=np.asarray(state.y),
+        kl=float(kl),
+        kl_history=np.asarray(kl_hist, np.float64) if kl_hist else np.zeros((0, 2)),
+        timings=timings,
+    )

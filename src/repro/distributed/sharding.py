@@ -1,0 +1,159 @@
+"""Logical-axis sharding rules (MaxText-style) + param sharding derivation.
+
+Model code annotates activations/weights with *logical* axis names; the
+active ``MeshRules`` maps them onto physical mesh axes.  With no active mesh
+everything is a no-op, so the same model code runs CPU smoke tests, the
+single-pod (data, model) mesh and the multi-pod (pod, data, model) mesh.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_STATE = threading.local()
+
+
+DEFAULT_RULES: dict[str, Any] = {
+    "batch": ("pod", "data"),    # data parallel over pods x data axis
+    "seq": None,                 # sequence replicated (activations)
+    "kv_seq": "data",            # decode KV caches: sequence-sharded (SP)
+    "latent_seq": None,          # MLA latent cache sequence axis (per-cell)
+    "embed": None,               # d_model in activations: replicated
+    "heads": "model",            # TP over attention heads
+    "kv_heads": "model",
+    "ffn": "model",              # TP over FFN hidden
+    "vocab": "model",            # TP over vocab
+    "experts": "model",          # EP shares the model axis
+    "fsdp": ("pod", "data"),     # ZeRO-3 weight sharding axis
+    "layers": None,              # scanned layer axis
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshRules:
+    mesh: Mesh
+    rules: dict[str, Any]
+
+    def axis(self, logical: str | None):
+        if logical is None:
+            return None
+        phys = self.rules.get(logical, None)
+        if phys is None:
+            return None
+        if isinstance(phys, str):
+            return phys if phys in self.mesh.axis_names else None
+        # tuple: keep only axes present in this mesh
+        kept = tuple(a for a in phys if a in self.mesh.axis_names)
+        return kept if kept else None
+
+    def spec(self, *logical: str | None) -> P:
+        return P(*(self.axis(a) for a in logical))
+
+    def sharding(self, *logical: str | None) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(*logical))
+
+
+def active_rules() -> MeshRules | None:
+    return getattr(_STATE, "rules", None)
+
+
+@contextlib.contextmanager
+def use_mesh_rules(mesh: Mesh | None, rules: dict[str, Any] | None = None):
+    prev = getattr(_STATE, "rules", None)
+    _STATE.rules = MeshRules(mesh, dict(rules or DEFAULT_RULES)) if mesh is not None else None
+    try:
+        yield _STATE.rules
+    finally:
+        _STATE.rules = prev
+
+
+def logical(x: jax.Array, *names: str | None) -> jax.Array:
+    """Constrain activation sharding by logical axis names (no-op w/o mesh)."""
+    r = active_rules()
+    if r is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, r.sharding(*names))
+
+
+def batch_axes() -> tuple[str, ...]:
+    r = active_rules()
+    if r is None:
+        return ()
+    ax = r.axis("batch")
+    if ax is None:
+        return ()
+    return (ax,) if isinstance(ax, str) else tuple(ax)
+
+
+# ---------------------------------------------------------------------------
+# Parameter shardings by leaf-path pattern
+# ---------------------------------------------------------------------------
+
+# map (substring of the param path, ndim) -> logical axes; first match wins.
+# paths look like "layers/attn/wq", "embed/embedding", "layers/mlp/experts/w1"
+_PARAM_RULES: list[tuple[str, dict[int, tuple]]] = [
+    ("embedding", {2: ("vocab", "fsdp")}),
+    ("unembed", {2: ("fsdp", "vocab")}),
+    ("experts", {3: ("experts", "fsdp", None), 4: (None, "experts", "fsdp", None)}),
+    ("router", {2: ("fsdp", None), 3: (None, "fsdp", None)}),
+    ("wq", {2: ("fsdp", "heads"), 3: (None, "fsdp", "heads")}),
+    ("wk", {2: ("fsdp", "heads"), 3: (None, "fsdp", "heads")}),
+    ("wv", {2: ("fsdp", "heads"), 3: (None, "fsdp", "heads")}),
+    ("wo", {2: ("heads", "fsdp"), 3: (None, "heads", "fsdp")}),
+    ("w_dkv", {2: ("fsdp", None), 3: (None, "fsdp", None)}),
+    ("w_dq", {2: ("fsdp", None), 3: (None, "fsdp", None)}),
+    ("w_uk", {3: (None, "fsdp", "heads"), 4: (None, None, "fsdp", "heads")}),
+    ("w_uv", {3: (None, "fsdp", "heads"), 4: (None, None, "fsdp", "heads")}),
+    ("w_uq", {2: ("fsdp", "heads"), 3: (None, "fsdp", "heads")}),
+    ("w_krope", {2: ("fsdp", None), 3: (None, "fsdp", None)}),
+    ("w1", {2: ("fsdp", "ffn"), 3: (None, "fsdp", "ffn")}),
+    ("w3", {2: ("fsdp", "ffn"), 3: (None, "fsdp", "ffn")}),
+    ("w2", {2: ("ffn", "fsdp"), 3: (None, "ffn", "fsdp")}),
+    ("in_proj", {2: ("fsdp", "heads"), 3: (None, "fsdp", "heads")}),
+    ("out_proj", {2: ("heads", "fsdp"), 3: (None, "heads", "fsdp")}),
+    ("conv", {2: (None, "heads"), 3: (None, None, "heads")}),
+]
+
+
+def _axis_size(mesh: Mesh, ax) -> int:
+    if ax is None:
+        return 1
+    axes = (ax,) if isinstance(ax, str) else ax
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    return size
+
+
+def _spec_for_leaf(path: str, shape: tuple, rules: MeshRules) -> P:
+    ndim = len(shape)
+    for pat, by_ndim in _PARAM_RULES:
+        if pat in path and ndim in by_ndim:
+            spec = [rules.axis(a) for a in by_ndim[ndim]]
+            # pjit *argument* shardings require exact divisibility; drop any
+            # axis that does not divide its dim (e.g. whisper's 51865 vocab)
+            spec = [a if shape[i] % _axis_size(rules.mesh, a) == 0 else None
+                    for i, a in enumerate(spec)]
+            return P(*spec)
+    # norms / biases / scalars: replicated
+    return P(*([None] * ndim))
+
+
+def params_shardings(params, mesh: Mesh, rules: dict | None = None):
+    """NamedSharding pytree for a param pytree (keyed by leaf path)."""
+    mr = MeshRules(mesh, dict(rules or DEFAULT_RULES))
+
+    def visit(path, leaf):
+        pstr = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        return NamedSharding(mesh, _spec_for_leaf(pstr, tuple(leaf.shape), mr))
+
+    return jax.tree_util.tree_map_with_path(visit, params)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

@@ -1,0 +1,27 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (this container is CPU-only; the
+kernels TARGET TPU v5e and are validated via the interpreter against the
+pure-jnp oracles in ref.py).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.attractive_kernel import attractive_forces_ell_pallas
+from repro.kernels.morton_kernel import morton_encode_pallas
+from repro.kernels.pairwise_kernel import pairwise_sq_dists_pallas
+
+_INTERPRET = jax.default_backend() != "tpu"
+
+
+def morton_encode(y, cent, r_span, depth: int = 16):
+    return morton_encode_pallas(y, cent, r_span, depth=depth, interpret=_INTERPRET)
+
+
+def pairwise_sq_dists(q, db, q_sqn=None, db_sqn=None):
+    return pairwise_sq_dists_pallas(q, db, q_sqn, db_sqn, interpret=_INTERPRET)
+
+
+def attractive_forces_ell(y, cols, vals):
+    return attractive_forces_ell_pallas(y, cols, vals, interpret=_INTERPRET)

@@ -1,0 +1,11 @@
+"""Pure-jnp oracles for every Pallas kernel (the `ref.py` contract).
+
+These re-export the core implementations — the kernels must agree with the
+library's own math to float tolerance across shape/dtype sweeps (see
+tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+from repro.core._pairwise import pairwise_sq_dists  # noqa: F401
+from repro.core.attractive import attractive_forces_ell  # noqa: F401
+from repro.core.morton import morton_encode  # noqa: F401

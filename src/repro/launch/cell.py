@@ -1,0 +1,158 @@
+"""Build one (architecture x shape x mesh) dry-run cell: the jitted,
+sharded step function + abstract operand shapes, ready to lower."""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, get_config
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.distributed.sharding import (
+    DEFAULT_RULES, MeshRules, params_shardings, use_mesh_rules,
+)
+from repro.launch.mesh import mesh_dp_size, mesh_tp_size
+from repro.models.model import build_model
+from repro.train.optimizer import AdamWConfig
+from repro.train.step import make_opt_init, make_train_step, opt_config_for
+
+
+def cell_rules(cfg: ArchConfig, shape: ShapeConfig, mesh) -> dict:
+    """Per-cell adjustments of the logical->physical axis rules.
+
+    Resolves the cache sharding policy so no spec uses a mesh axis twice:
+      batch shardable  -> cache: (batch over data, heads over model if they
+                          divide, else sequence over model)
+      batch unshardable (long_500k) -> SP: sequence over data (+ heads over
+                          model when divisible)
+    """
+    rules = dict(DEFAULT_RULES)
+    dp = mesh_dp_size(mesh)
+    tp = mesh_tp_size(mesh)
+    batch_ok = shape.global_batch % dp == 0
+    heads_ok = cfg.n_kv_heads % tp == 0
+    # Megatron-style sequence parallelism for the residual stream: the
+    # layer-scan carry (saved for backward) is sharded over the model axis,
+    # cutting saved activations by TP; projections re-gather as needed.
+    if shape.kind in ("train", "prefill") and shape.seq_len % tp == 0:
+        rules["seq"] = "model"
+    if batch_ok:
+        rules["kv_seq"] = None if heads_ok else "model"
+    else:
+        rules["batch"] = None
+        rules["kv_seq"] = "data"
+    if not heads_ok:
+        rules["kv_heads"] = None
+    # MLA latent caches have no head dim: always sequence-shard over model
+    # when batch takes the data axes
+    rules["latent_seq"] = ("model" if batch_ok else "data")
+    return rules
+
+
+def cache_shardings(cache, cfg: ArchConfig, shape: ShapeConfig, mesh, rules: dict):
+    """NamedSharding pytree for a decode cache (reads the resolved rules)."""
+    mr = MeshRules(mesh, rules)
+    b_ax = mr.axis("batch")
+    seq_ax = mr.axis("kv_seq")
+    h_ax = mr.axis("kv_heads")
+    lat_ax = mr.axis("latent_seq")
+
+    def fits(shape_, spec):
+        return all(d % _ax_size(mesh, a) == 0 for d, a in zip(shape_, spec))
+
+    def visit(path, leaf):
+        pstr = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        nd = leaf.ndim
+        spec = [None] * nd
+        if (pstr.endswith("k") or pstr.endswith("v")) and nd == 5:
+            spec = [None, b_ax, seq_ax, h_ax, None]   # [L, B, S, Hkv, dh]
+        elif ("ckv" in pstr or "krope" in pstr) and nd == 4:
+            spec = [None, b_ax, lat_ax, None]          # [L, B, S, r]
+        elif nd >= 2:
+            spec[1] = b_ax                              # states, conv, x_time
+        spec = [a if leaf.shape[i] % _ax_size(mesh, a) == 0 else None
+                for i, a in enumerate(spec)]
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(visit, cache)
+
+
+def _ax_size(mesh, ax):
+    if ax is None:
+        return 1
+    axes = (ax,) if isinstance(ax, str) else ax
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def batch_shardings(specs: dict, mesh, rules: dict):
+    mr = MeshRules(mesh, rules)
+    b_ax = mr.axis("batch")
+
+    def one(name, s):
+        spec = [None] * len(s.shape)
+        if len(s.shape) >= 1:
+            spec[0] = b_ax
+        return NamedSharding(mesh, P(*spec))
+
+    return {k: one(k, v) for k, v in specs.items()}
+
+
+def build_cell(arch: str, shape_name: str, mesh, opt_cfg: AdamWConfig | None = None):
+    """Returns (lowered, info) — `lowered` is the jax Lowered for the cell."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if shape_name in cfg.skip_shapes:
+        raise ValueError(f"{arch} skips {shape_name}: {cfg.skip_reason}")
+    model = build_model(cfg)
+    rules = cell_rules(cfg, shape, mesh)
+    opt_cfg = opt_cfg or opt_config_for(cfg)
+
+    with use_mesh_rules(mesh, rules):
+        key = jax.random.PRNGKey(0)
+        param_shapes = jax.eval_shape(model.init, key)
+        p_sh = params_shardings(param_shapes, mesh, rules)
+        specs = model.input_specs(shape)
+
+        if shape.kind == "train":
+            train_step = make_train_step(model, opt_cfg, grad_shardings=p_sh)
+            opt_init = make_opt_init(model, opt_cfg)
+            opt_shapes = jax.eval_shape(opt_init, param_shapes)
+            # moments share the param tree sharding; step counter replicated
+            o_sh = type(opt_shapes)(
+                step=NamedSharding(mesh, P()),
+                m=params_shardings(opt_shapes.m, mesh, rules),
+                v=params_shardings(opt_shapes.v, mesh, rules),
+            )
+            b_sh = batch_shardings(specs, mesh, rules)
+            fn = jax.jit(
+                train_step,
+                in_shardings=(p_sh, o_sh, b_sh),
+                out_shardings=(p_sh, o_sh, None),
+                donate_argnums=(0, 1),
+            )
+            lowered = fn.lower(param_shapes, opt_shapes, specs)
+        elif shape.kind == "prefill":
+            b_sh = batch_shardings(specs, mesh, rules)
+            fn = jax.jit(model.prefill, in_shardings=(p_sh, b_sh))
+            lowered = fn.lower(param_shapes, specs)
+        else:  # decode
+            c_sh = cache_shardings(specs["cache"], cfg, shape, mesh, rules)
+            tok_sh = batch_shardings(
+                {"token": specs["token"], "pos": specs["pos"]}, mesh, rules)
+            fn = jax.jit(
+                model.decode_step,
+                in_shardings=(p_sh, c_sh, tok_sh["token"], tok_sh["pos"]),
+                out_shardings=(None, c_sh),
+                donate_argnums=(1,),
+            )
+            lowered = fn.lower(param_shapes, specs["cache"], specs["token"], specs["pos"])
+
+    info = dict(arch=arch, shape=shape_name, kind=shape.kind,
+                mesh_shape=dict(mesh.shape), n_devices=mesh.size)
+    return lowered, info

@@ -1,0 +1,161 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry run: lower + compile every (architecture x shape) cell on
+the production meshes and record memory/cost/collective analyses.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3_405b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi_pod] [--out runs/dryrun]
+
+The 512 placeholder host devices exist ONLY here (the env var above must be
+set before any jax import); smoke tests and benchmarks see 1 device.
+"""
+
+import argparse
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCH_IDS, SHAPES, get_config, param_count
+from repro.launch.cell import build_cell
+from repro.launch.hlo_analysis import collective_bytes, model_flops, roofline_terms
+from repro.launch.hlo_cost import analyze_hlo
+from repro.launch.mesh import make_production_mesh
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: pathlib.Path,
+             save_hlo: bool = False) -> dict:
+    mesh_tag = "pod512" if multi_pod else "pod256"
+    tag = f"{arch}__{shape_name}__{mesh_tag}"
+    out_path = out_dir / f"{tag}.json"
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    rec: dict = dict(arch=arch, shape=shape_name, mesh=mesh_tag, ok=False)
+
+    if shape_name in cfg.skip_shapes:
+        rec.update(skipped=True, reason=cfg.skip_reason, ok=True)
+        out_path.write_text(json.dumps(rec, indent=2))
+        return rec
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    try:
+        lowered, info = build_cell(arch, shape_name, mesh)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+        mem = {}
+        try:
+            ma = compiled.memory_analysis()
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes",
+                      "alias_size_in_bytes"):
+                v = getattr(ma, k, None)
+                if v is not None:
+                    mem[k] = int(v)
+        except Exception as e:  # noqa: BLE001 - CPU backend may not implement
+            mem["error"] = str(e)
+
+        cost = {}
+        try:
+            ca = compiled.cost_analysis()
+            if isinstance(ca, (list, tuple)):
+                ca = ca[0]
+            for k in ("flops", "bytes accessed", "optimal_seconds", "utilization operand"):
+                if ca and k in ca:
+                    cost[k] = float(ca[k])
+            if ca:
+                cost.update({k: float(v) for k, v in ca.items()
+                             if isinstance(v, (int, float)) and len(cost) < 24})
+        except Exception as e:  # noqa: BLE001
+            cost["error"] = str(e)
+
+        hlo = compiled.as_text()
+        coll_once = collective_bytes(hlo)       # body-once (XLA-style) counts
+        if save_hlo:
+            (out_dir / f"{tag}.hlo.txt").write_text(hlo)
+
+        # loop-trip-aware cost model (XLA cost_analysis counts scan bodies
+        # once; see launch/hlo_cost.py) — these drive the roofline terms
+        hc = analyze_hlo(hlo)
+        coll = hc["collectives"]
+        n_chips = mesh.size
+        flops_dev = hc["flops"]
+        bytes_dev = hc["bytes"]
+        roof = roofline_terms(flops_dev, bytes_dev, float(coll["total"]), n_chips)
+        roof["xla_flops_body_once"] = cost.get("flops", 0.0)
+        roof["xla_bytes_body_once"] = cost.get("bytes accessed", 0.0)
+        roof["collectives_body_once"] = coll_once
+        total_p, active_p = param_count(cfg)
+        mf = model_flops(cfg, shape, active_p)
+        roof["model_flops"] = mf
+        roof["useful_fraction"] = mf / roof["hlo_flops_global"] if roof["hlo_flops_global"] else None
+
+        rec.update(
+            ok=True, skipped=False, lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+            n_devices=n_chips, memory=mem, cost_per_device=cost,
+            collectives_per_device=coll, roofline=roof,
+            params_total=total_p, params_active=active_p,
+            hlo_bytes=len(hlo),
+        )
+    except Exception as e:  # noqa: BLE001
+        rec.update(ok=False, error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+    out_path.write_text(json.dumps(rec, indent=2))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS + ["all"], default="all")
+    ap.add_argument("--shape", choices=list(SHAPES) + ["all"], default="all")
+    ap.add_argument("--multi_pod", action="store_true")
+    ap.add_argument("--both_meshes", action="store_true")
+    ap.add_argument("--out", default="runs/dryrun")
+    ap.add_argument("--save_hlo", action="store_true")
+    ap.add_argument("--skip_existing", action="store_true")
+    args = ap.parse_args()
+
+    out_dir = pathlib.Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    archs = ARCH_IDS if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    n_ok = n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch}__{shape}__{'pod512' if mp else 'pod256'}"
+                out_path = out_dir / f"{tag}.json"
+                if args.skip_existing and out_path.exists():
+                    prev = json.loads(out_path.read_text())
+                    if prev.get("ok"):
+                        print(f"[skip] {tag}")
+                        continue
+                t0 = time.time()
+                rec = run_cell(arch, shape, mp, out_dir, save_hlo=args.save_hlo)
+                dt = time.time() - t0
+                if rec["ok"]:
+                    n_ok += 1
+                    status = "SKIP " + rec.get("reason", "")[:40] if rec.get("skipped") else "OK"
+                    mem = rec.get("memory", {})
+                    arg_gb = mem.get("argument_size_in_bytes", 0) / 2**30
+                    tmp_gb = mem.get("temp_size_in_bytes", 0) / 2**30
+                    dom = rec.get("roofline", {}).get("dominant", "-")
+                    print(f"[{status:>5}] {tag}  {dt:6.1f}s args={arg_gb:.2f}GiB "
+                          f"temp={tmp_gb:.2f}GiB bound={dom}", flush=True)
+                else:
+                    n_fail += 1
+                    print(f"[FAIL ] {tag}  {dt:6.1f}s {rec['error'][:200]}", flush=True)
+    print(f"\ndry-run complete: {n_ok} ok, {n_fail} failed")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,93 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+collective_bytes is not in cost_analysis(): we parse the (post-SPMD,
+per-device) HLO text and sum result-shape bytes of every collective op,
+bucketed by op kind.  Hardware model: TPU v5e — 197 TFLOP/s bf16/chip,
+819 GB/s HBM/chip, ~50 GB/s/link ICI (spec-provided constants).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# result type (possibly a tuple) followed by the collective opcode
+_OP_RE = re.compile(
+    r"=\s*(\([^)]*\)|\S+)\s+(" + "|".join(_COLLECTIVES) + r")(-start)?\(")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Per-device bytes moved through each collective kind (result shapes);
+    '-done' ops are skipped so async pairs are not double counted."""
+    out: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        if "-done(" in line:
+            continue
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        out[m.group(2)] += _shape_bytes(m.group(1))
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+def roofline_terms(flops_per_dev: float, bytes_per_dev: float,
+                   coll_bytes_per_dev: float, n_chips: int) -> dict[str, Any]:
+    """Three roofline terms in seconds (global quantities / aggregate rate
+    == per-device quantity / per-chip rate for uniformly sharded work)."""
+    t_compute = flops_per_dev / PEAK_FLOPS
+    t_memory = bytes_per_dev / HBM_BW
+    t_coll = coll_bytes_per_dev / ICI_BW
+    terms = {"compute_s": t_compute, "memory_s": t_memory, "collective_s": t_coll}
+    dominant = max(terms, key=terms.get)
+    total = max(terms.values())
+    return {
+        **terms,
+        "dominant": dominant.replace("_s", ""),
+        "bound_time_s": total,
+        "hlo_flops_global": flops_per_dev * n_chips,
+        "hlo_bytes_global": bytes_per_dev * n_chips,
+        "collective_bytes_global": coll_bytes_per_dev * n_chips,
+    }
+
+
+def model_flops(cfg, shape, active_params: int) -> float:
+    """MODEL_FLOPS = 6 * N_active * D for train, 2 * N_active * D for
+    inference-style steps (D = tokens processed by the step)."""
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * active_params * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * active_params * tokens
+    tokens = shape.global_batch                      # one token per sequence
+    return 2.0 * active_params * tokens

@@ -1,0 +1,394 @@
+"""HLO-text cost model with loop-trip-count awareness.
+
+XLA's built-in ``compiled.cost_analysis()`` counts each while-loop body
+*once*, so any scan-over-layers / microbatch / flash-chunk model is
+undercounted by orders of magnitude.  This analyzer parses the post-
+optimization HLO text and:
+
+  * multiplies while bodies by their static trip count (read from the
+    ``s32[] constant(N)`` in the loop condition — scans/fori always lower
+    to such a bound);
+  * counts FLOPs from dot shapes (2*M*N*K with batch/contracting dims from
+    the printed dnums) plus 1 flop/element for arithmetic elementwise ops,
+    recursing into fusion bodies;
+  * models HBM bytes as sum(operand + result bytes) of *top-level* ops only
+    (fusion internals are register/VMEM-resident post-fusion);
+  * buckets collective bytes (result shapes; '-done' halves skipped).
+
+Used by launch/dryrun.py for the roofline terms (EXPERIMENTS.md §Roofline).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+    "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+# ops counted at 1 flop per output element
+_ELTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "power",
+    "exponential", "log", "log-plus-one", "exponential-minus-one", "tanh",
+    "rsqrt", "sqrt", "negate", "abs", "sine", "cosine", "logistic",
+    "compare", "select", "and", "or", "xor", "not", "floor", "ceil",
+    "round-nearest-afz", "round-nearest-even", "sign", "atan2", "erf",
+    "remainder", "clamp", "cbrt",
+}
+_REDUCE_OPS = {"reduce", "reduce-window"}
+
+
+def _shape_elems_bytes(type_str: str) -> tuple[int, int]:
+    """(elements, bytes) summed over all array shapes in a type string."""
+    elems = 0
+    byts = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        byts += n * _DTYPE_BYTES[dt]
+    return elems, byts
+
+
+def _dims_of(type_str: str) -> list[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    operands: list[str]
+    attrs: str
+    line: str
+    is_root: bool = False
+
+
+def _canon(type_str: str) -> str:
+    """dims+dtype only (layout annotations stripped)."""
+    return re.sub(r"\{[^}]*\}", "", type_str)
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    param_types: dict[str, str]
+    instrs: list[Instr]
+
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\((.*)$")
+_INSTR_HEAD = re.compile(r"^\s+(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _take_balanced(s: str, open_ch="(", close_ch=")") -> tuple[str, str]:
+    """s starts with open_ch; return (group incl parens, remainder)."""
+    depth = 0
+    for i, ch in enumerate(s):
+        if ch == open_ch:
+            depth += 1
+        elif ch == close_ch:
+            depth -= 1
+            if depth == 0:
+                return s[: i + 1], s[i + 1:]
+    return s, ""
+
+
+def parse_hlo(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for line in text.splitlines():
+        if line.startswith("}"):
+            cur = None
+            continue
+        if not line.startswith(" ") and ("{" in line) and ("(" in line):
+            m = _COMP_HDR.match(line.strip())
+            if m:
+                name = m.group(1)
+                # parameter list: "pname: type, pname: type) -> ..."
+                params = {}
+                sig = m.group(2)
+                for pm in re.finditer(r"([\w.\-]+):\s*(\([^)]*\)|[^,)]+)", sig):
+                    params[pm.group(1)] = pm.group(2)
+                cur = Computation(name=name, param_types=params, instrs=[])
+                comps[name] = cur
+            continue
+        if cur is None:
+            continue
+        m = _INSTR_HEAD.match(line)
+        if not m:
+            continue
+        name, rest = m.groups()
+        # result type: a balanced tuple "(... /*index=5*/ ...)" or one token
+        if rest.startswith("("):
+            type_str, after = _take_balanced(rest)
+        else:
+            parts = rest.split(" ", 1)
+            type_str, after = parts[0], (parts[1] if len(parts) > 1 else "")
+        after = after.strip()
+        paren = after.find("(")
+        if paren < 0:
+            continue
+        opcode = after[:paren].strip()
+        args, attrs = _take_balanced(after[paren:])
+        operands = _OPERAND_RE.findall(args)
+        cur.instrs.append(Instr(name=name, type_str=type_str, opcode=opcode,
+                                operands=operands, attrs=attrs, line=line,
+                                is_root="ROOT" in line.split("=")[0]))
+    return comps
+
+
+def _fusion_bytes(ins: Instr, types: dict[str, str], comps: dict) -> float:
+    """Precise HBM traffic of a fusion op.
+
+    * output: if the fusion root is a dynamic-update-slice the destination
+      is updated in place — write = update-slice bytes, not the buffer;
+    * inputs: a parameter whose only body consumers are dynamic-slices is
+      read slice-wise (sum of slice outputs); a parameter that is the
+      in-place destination of a root DUS is not read at all; anything else
+      is a full read.
+    """
+    m = re.search(r"calls=%([\w.\-]+)", ins.line)
+    body = comps.get(m.group(1)) if m else None
+    _, out_b = _shape_elems_bytes(ins.type_str)
+    if body is None:
+        in_b = sum(_shape_elems_bytes(types[o])[1] for o in ins.operands if o in types)
+        return out_b + in_b
+    body_types = dict(body.param_types)
+    params_in_order: list[str] = []
+    for bi in body.instrs:
+        body_types[bi.name] = bi.type_str
+        if bi.opcode == "parameter":
+            params_in_order.append(bi.name)
+    root = next((bi for bi in body.instrs if bi.is_root), body.instrs[-1] if body.instrs else None)
+    dus_dest = None
+    if root is not None and root.opcode == "dynamic-update-slice":
+        dus_dest = root.operands[0] if root.operands else None
+        upd = root.operands[1] if len(root.operands) > 1 else None
+        out_b = _shape_elems_bytes(body_types.get(upd, ""))[1] * 2 if upd else out_b
+
+    def param_read(pname: str) -> float:
+        full = _shape_elems_bytes(body_types.get(pname, ""))[1]
+        consumers = [bi for bi in body.instrs if pname in bi.operands]
+        if not consumers:
+            return 0.0
+        if any(bi.opcode == "dynamic-update-slice" and bi.operands
+               and bi.operands[0] == pname for bi in consumers):
+            return 0.0                                     # in-place dest
+        if all(bi.opcode in ("dynamic-slice", "gather") for bi in consumers):
+            return float(sum(_shape_elems_bytes(bi.type_str)[1] for bi in consumers))
+        return float(full)
+
+    in_b = 0.0
+    for op_name, pname in zip(ins.operands, params_in_order):
+        in_b += param_read(pname)
+    return out_b + in_b
+
+
+def _trip_count(cond: Computation) -> int:
+    """largest s32[] scalar constant in the loop condition = loop bound."""
+    best = 1
+    for ins in cond.instrs:
+        if ins.opcode == "constant" and ins.type_str.startswith("s32[]"):
+            m = re.search(r"constant\((-?\d+)\)", ins.line)
+            if m:
+                best = max(best, int(m.group(1)))
+    return max(best, 1)
+
+
+_CALLS_RE = re.compile(r"(?:calls|body|condition|to_apply|branch_computations)=\{?%?([\w.\-,% ]+)\}?")
+
+
+def _dot_flops(ins: Instr, types: dict[str, str]) -> float:
+    out_elems = 1
+    for d in _dims_of(ins.type_str):
+        out_elems *= d
+    lhs = ins.operands[0] if ins.operands else None
+    k = 1
+    cdims = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.line)
+    if lhs is not None and lhs in types and cdims:
+        dims = _dims_of(types[lhs])
+        for i in cdims.group(1).split(","):
+            if i and int(i) < len(dims):
+                k *= dims[int(i)]
+    return 2.0 * out_elems * k
+
+
+def analyze_hlo(text: str) -> dict:
+    comps = parse_hlo(text)
+    entry = None
+    for line in text.splitlines():
+        if line.startswith("ENTRY"):
+            m = _COMP_HDR.match(line.strip()[6:].strip())
+            if m:
+                entry = m.group(1)
+            break
+    if entry is None or entry not in comps:
+        # fall back: the computation named like the module, else largest
+        entry = max(comps, key=lambda c: len(comps[c].instrs))
+
+    memo_flops: dict[str, float] = {}
+    memo_bytes: dict[str, float] = {}
+    memo_coll: dict[str, dict] = {}
+
+    def flops_of(cname: str) -> float:
+        if cname in memo_flops:
+            return memo_flops[cname]
+        memo_flops[cname] = 0.0  # cycle guard
+        comp = comps.get(cname)
+        if comp is None:
+            return 0.0
+        total = 0.0
+        types = dict(comp.param_types)
+        for ins in comp.instrs:
+            types[ins.name] = ins.type_str
+        for ins in comp.instrs:
+            op = ins.opcode
+            if op == "dot":
+                total += _dot_flops(ins, types)
+            elif op in _ELTWISE:
+                total += _shape_elems_bytes(ins.type_str)[0]
+            elif op in _REDUCE_OPS:
+                # ~1 flop per input element
+                for o in ins.operands[: max(1, len(ins.operands) // 2)]:
+                    if o in types:
+                        total += _shape_elems_bytes(types[o])[0]
+            elif op == "fusion":
+                m = re.search(r"calls=%([\w.\-]+)", ins.line)
+                if m:
+                    total += flops_of(m.group(1))
+            elif op == "while":
+                mb = re.search(r"body=%([\w.\-]+)", ins.line)
+                mc = re.search(r"condition=%([\w.\-]+)", ins.line)
+                trip = _trip_count(comps[mc.group(1)]) if mc and mc.group(1) in comps else 1
+                if mb:
+                    total += trip * flops_of(mb.group(1))
+            elif op in ("call", "custom-call", "async-start"):
+                m = re.search(r"(?:to_apply|calls|called_computation)=%([\w.\-]+)", ins.line)
+                if m:
+                    total += flops_of(m.group(1))
+            elif op == "conditional":
+                mbr = re.search(r"branch_computations=\{([^}]*)\}", ins.line)
+                if mbr:
+                    branches = [_b.strip().lstrip("%") for _b in mbr.group(1).split(",")]
+                    vals = [flops_of(b) for b in branches if b in comps]
+                    if vals:
+                        total += max(vals)
+        memo_flops[cname] = total
+        return total
+
+    def bytes_of(cname: str) -> float:
+        if cname in memo_bytes:
+            return memo_bytes[cname]
+        memo_bytes[cname] = 0.0
+        comp = comps.get(cname)
+        if comp is None:
+            return 0.0
+        total = 0.0
+        types = dict(comp.param_types)
+        for ins in comp.instrs:
+            types[ins.name] = ins.type_str
+        for ins in comp.instrs:
+            op = ins.opcode
+            if op in ("parameter", "constant", "get-tuple-element", "tuple",
+                      "bitcast", "after-all"):
+                continue
+            if op == "while":
+                mb = re.search(r"body=%([\w.\-]+)", ins.line)
+                mc = re.search(r"condition=%([\w.\-]+)", ins.line)
+                trip = _trip_count(comps[mc.group(1)]) if mc and mc.group(1) in comps else 1
+                if mb:
+                    total += trip * bytes_of(mb.group(1))
+                if mc and mc.group(1) in comps:
+                    total += trip * bytes_of(mc.group(1))
+                continue
+            if op == "conditional":
+                mbr = re.search(r"branch_computations=\{([^}]*)\}", ins.line)
+                if mbr:
+                    branches = [_b.strip().lstrip("%") for _b in mbr.group(1).split(",")]
+                    vals = [bytes_of(b) for b in branches if b in comps]
+                    if vals:
+                        total += max(vals)
+                continue
+            if op == "call":
+                m = re.search(r"to_apply=%([\w.\-]+)", ins.line)
+                if m:
+                    total += bytes_of(m.group(1))
+                continue
+            # top-level op: operand + result traffic
+            _, out_b = _shape_elems_bytes(ins.type_str)
+            if op == "fusion":
+                total += _fusion_bytes(ins, types, comps)
+                continue
+            if op == "dynamic-update-slice":
+                # in-place update: traffic = update slice read + region write
+                upd = sum(_shape_elems_bytes(types[o])[1] for o in ins.operands
+                          if o in types and _canon(types[o]) != _canon(ins.type_str))
+                total += 2 * max(upd, 1)
+                continue
+            if op == "dynamic-slice":
+                total += 2 * out_b
+                continue
+            in_b = sum(_shape_elems_bytes(types[o])[1] for o in ins.operands if o in types)
+            total += out_b + in_b
+        memo_bytes[cname] = total
+        return total
+
+    def coll_of(cname: str) -> dict:
+        if cname in memo_coll:
+            return memo_coll[cname]
+        memo_coll[cname] = defaultdict(float)
+        comp = comps.get(cname)
+        if comp is None:
+            return {}
+        acc: dict[str, float] = defaultdict(float)
+        for ins in comp.instrs:
+            op = ins.opcode
+            base = op.replace("-start", "")
+            if base in _COLLECTIVES and not op.endswith("-done"):
+                acc[base] += _shape_elems_bytes(ins.type_str)[1]
+            elif op == "while":
+                mb = re.search(r"body=%([\w.\-]+)", ins.line)
+                mc = re.search(r"condition=%([\w.\-]+)", ins.line)
+                trip = _trip_count(comps[mc.group(1)]) if mc and mc.group(1) in comps else 1
+                if mb:
+                    for kk, vv in coll_of(mb.group(1)).items():
+                        acc[kk] += trip * vv
+            elif op == "fusion":
+                pass  # collectives never fuse
+            elif op in ("call", "conditional"):
+                for m in re.finditer(r"%([\w.\-]+)", ins.attrs.split(")", 1)[-1]):
+                    if m.group(1) in comps:
+                        for kk, vv in coll_of(m.group(1)).items():
+                            acc[kk] += vv
+        memo_coll[cname] = acc
+        return acc
+
+    coll = dict(coll_of(entry))
+    for kind in _COLLECTIVES:
+        coll.setdefault(kind, 0.0)
+    coll["total"] = sum(coll[k] for k in _COLLECTIVES)
+    return {
+        "flops": flops_of(entry),
+        "bytes": bytes_of(entry),
+        "collectives": coll,
+        "entry": entry,
+        "n_computations": len(comps),
+    }

@@ -1,0 +1,31 @@
+"""Production mesh definitions.
+
+Functions (not module constants) so importing never touches jax device
+state; the dry-run forces 512 host devices *before* calling these.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(data: int = 1, model: int = 1):
+    """Small mesh over however many (host) devices exist — tests/examples."""
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def mesh_dp_size(mesh) -> int:
+    size = 1
+    for ax in ("pod", "data"):
+        if ax in mesh.axis_names:
+            size *= mesh.shape[ax]
+    return size
+
+
+def mesh_tp_size(mesh) -> int:
+    return mesh.shape.get("model", 1)

@@ -1,0 +1,36 @@
+"""Serving launcher (reduced configs on CPU; decode-shape cells at pod
+scale are exercised by launch/dryrun.py).
+
+    PYTHONPATH=src python -m repro.launch.serve --arch rwkv6_3b --requests 6
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="deepseek_7b")
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--slots", type=int, default=3)
+    ap.add_argument("--max_new", type=int, default=8)
+    args = ap.parse_args()
+
+    import jax
+    from repro.configs import get_reduced_config
+    from repro.models.model import build_model
+    from repro.serve.engine import Request, ServeEngine
+
+    cfg = get_reduced_config(args.arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(model, batch_slots=args.slots, max_seq=96)
+    for r in range(args.requests):
+        eng.submit(Request(rid=r, prompt=[1 + r, 2, 3], max_new_tokens=args.max_new))
+    done = eng.run(params)
+    print(f"served {len(done)} requests "
+          f"({sum(len(r.generated) for r in done)} tokens)")
+
+
+if __name__ == "__main__":
+    main()

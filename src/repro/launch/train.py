@@ -1,0 +1,65 @@
+"""Pod-scale training launcher: wires an assigned architecture, the mesh,
+sharded train_step and the fault-tolerant Trainer together.
+
+    PYTHONPATH=src python -m repro.launch.train --arch deepseek_7b \
+        --data_parallel 2 --model_parallel 1 --steps 20 --reduced
+
+On real hardware the same entry point runs per host under
+``jax.distributed.initialize()`` (multi-controller); device counts and the
+mesh shape come from flags.  With --reduced it runs the smoke-scale config
+on whatever devices exist (CPU included).
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="deepseek_7b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--data_parallel", type=int, default=1)
+    ap.add_argument("--model_parallel", type=int, default=1)
+    ap.add_argument("--ckpt_dir", default="runs/launch_train")
+    ap.add_argument("--compress_grads", action="store_true")
+    args = ap.parse_args()
+
+    import jax
+    from repro.configs import get_config, get_reduced_config
+    from repro.data.pipeline import FrontendPipeline, TokenPipeline
+    from repro.distributed.sharding import DEFAULT_RULES, use_mesh_rules
+    from repro.launch.mesh import make_local_mesh
+    from repro.models.model import build_model
+    from repro.train.trainer import Trainer, TrainerConfig
+
+    cfg = get_reduced_config(args.arch) if args.reduced else get_config(args.arch)
+    model = build_model(cfg)
+    if cfg.family == "vlm":
+        pipe = FrontendPipeline(cfg.vocab_size, args.batch, args.seq, seed=0,
+                                frontend_key="patches",
+                                frontend_shape=(cfg.vlm.n_patches, cfg.d_model))
+    elif cfg.family == "audio":
+        pipe = FrontendPipeline(cfg.vocab_size, args.batch, args.seq, seed=0,
+                                frontend_key="frames",
+                                frontend_shape=(cfg.enc_dec.n_frames, cfg.d_model))
+    else:
+        pipe = TokenPipeline(cfg.vocab_size, args.batch, args.seq, seed=0)
+
+    tcfg = TrainerConfig(n_steps=args.steps, ckpt_every=max(args.steps // 2, 5),
+                         ckpt_dir=args.ckpt_dir, log_every=5)
+    n_dev = args.data_parallel * args.model_parallel
+    if n_dev > 1:
+        mesh = make_local_mesh(args.data_parallel, args.model_parallel)
+        with use_mesh_rules(mesh, DEFAULT_RULES):
+            trainer = Trainer(model, pipe, tcfg)
+            trainer.run(callback=lambda s, m: print(f"step {s} loss {m['loss_mean']:.4f}"))
+    else:
+        trainer = Trainer(model, pipe, tcfg)
+        trainer.run(callback=lambda s, m: print(f"step {s} loss {m['loss_mean']:.4f}"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,90 @@
+"""GQA/MHA attention block with KV cache (+ cross-attention for enc-dec)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import logical
+from repro.models.layers import apply_rope, attention, chunked_attention, init_dense
+
+
+def init_attention(key, cfg: ArchConfig, dtype):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": init_dense(k1, (d, cfg.n_heads * hd), dtype),
+        "wk": init_dense(k2, (d, cfg.n_kv_heads * hd), dtype),
+        "wv": init_dense(k3, (d, cfg.n_kv_heads * hd), dtype),
+        "wo": init_dense(k4, (cfg.n_heads * hd, d), dtype, scale=(cfg.n_heads * hd) ** -0.5 / (2 * cfg.n_layers) ** 0.5),
+    }
+
+
+def init_kv_cache(cfg: ArchConfig, batch: int, seq: int, dtype):
+    hd = cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((batch, seq, cfg.n_kv_heads, hd), dtype),
+        "v": jnp.zeros((batch, seq, cfg.n_kv_heads, hd), dtype),
+    }
+
+
+def attention_block(
+    params,
+    x,
+    positions,
+    cfg: ArchConfig,
+    *,
+    causal: bool = True,
+    use_rope: bool = True,
+    cache=None,
+    cache_pos=None,
+    cross_kv=None,
+):
+    """Returns (out, new_cache).
+
+    train/prefill: x [B, S, D], cache None -> chunked flash attention.
+    decode: x [B, 1, D], cache {k, v} of capacity S; writes at cache_pos.
+    cross_kv: (k, v) from the encoder (cross-attention; ignores cache/rope).
+    """
+    b, s, d = x.shape
+    hd = cfg.resolved_head_dim
+    # constrain the *flattened* head dim (always divisible by the model axis,
+    # unlike n_heads itself for e.g. 24-head phi4 on a 16-way TP axis)
+    q = logical(x @ params["wq"], "batch", None, "heads")
+    q = q.reshape(b, s, cfg.n_heads, hd)
+
+    if cross_kv is not None:
+        k, v = cross_kv
+        out = attention(q, k, v, causal=False)
+        out = logical(out.reshape(b, s, -1), "batch", None, "heads")
+        return (out @ params["wo"]), cache
+
+    k = (x @ params["wk"]).reshape(b, s, cfg.n_kv_heads, hd)
+    v = (x @ params["wv"]).reshape(b, s, cfg.n_kv_heads, hd)
+    if use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    if cache is None:
+        # full-context attention reads all keys per head group: make the
+        # gather from SP-sharded projections explicit (avoids the SPMD
+        # "involuntary full rematerialization" resharding path)
+        k = logical(k, "batch", None, "kv_heads", None)
+        v = logical(v, "batch", None, "kv_heads", None)
+
+    if cache is None:
+        out = chunked_attention(q, k, v, causal=causal, chunk=cfg.attn_chunk)
+    else:
+        # single-token decode against a sequence-shardable cache
+        cap = cache["k"].shape[1]
+        pos = jnp.minimum(cache_pos, cap - 1)            # [B] int32
+        wrt = jax.vmap(lambda c, n, p: jax.lax.dynamic_update_slice(c, n, (p, 0, 0)))
+        k_cache = wrt(cache["k"], k.astype(cache["k"].dtype), pos)
+        v_cache = wrt(cache["v"], v.astype(cache["v"].dtype), pos)
+        k_cache = logical(k_cache, "batch", "kv_seq", "kv_heads", None)
+        v_cache = logical(v_cache, "batch", "kv_seq", "kv_heads", None)
+        kpos = jnp.arange(cap)[None, :]
+        mask = (kpos <= pos[:, None])[:, None, None, :]  # [B,1,1,cap]
+        out = attention(q, k_cache, v_cache, causal=False, mask=mask)
+        cache = {"k": k_cache, "v": v_cache}
+    out = logical(out.reshape(b, s, -1), "batch", None, "heads")
+    return (out @ params["wo"]), cache

@@ -1,0 +1,200 @@
+"""Shared model building blocks: norms, RoPE, SwiGLU, chunked attention."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import logical
+
+
+def init_dense(key, shape, dtype, scale: float | None = None):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = scale if scale is not None else fan_in**-0.5
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape) * std).astype(dtype)
+
+
+def rms_norm(x, scale, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(dtype)
+
+
+def swiglu(x, w1, w3, w2):
+    h = jax.nn.silu(x @ w1) * (x @ w3)
+    h = logical(h, "batch", None, "ffn")   # seq left free: it may be SP-sharded
+    return h @ w2
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float, dtype=jnp.float32):
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=dtype) / half))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: [..., S, H, dh] (dh even), positions: [..., S] int32."""
+    dh = x.shape[-1]
+    freqs = rope_frequencies(dh, theta)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, dh/2]
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention cores
+# ---------------------------------------------------------------------------
+
+def _repeat_kv(k, n_rep: int):
+    if n_rep == 1:
+        return k
+    b, s, h, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, h, n_rep, d)).reshape(b, s, h * n_rep, d)
+
+
+def attention(q, k, v, *, causal: bool, q_offset=0, mask=None):
+    """Plain softmax attention — reference path and decode path.
+
+    q: [B, Sq, H, dh], k/v: [B, Skv, Hkv, dh].  f32 softmax accumulation.
+    """
+    h, hkv = q.shape[2], k.shape[2]
+    k = _repeat_kv(k, h // hkv)
+    v = _repeat_kv(v, h // hkv)
+    scale = q.shape[-1] ** -0.5
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k, preferred_element_type=jnp.float32) * scale
+    if causal:
+        sq, sk = q.shape[1], k.shape[1]
+        qpos = jnp.arange(sq)[:, None] + q_offset
+        kpos = jnp.arange(sk)[None, :]
+        logits = jnp.where((kpos <= qpos)[None, None], logits, -1e30)
+    if mask is not None:
+        logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def chunked_attention(q, k, v, *, causal: bool, chunk: int = 512, q_offset: int = 0):
+    """Flash attention (online softmax over KV chunks) with a custom VJP.
+
+    Forward never materializes the [Sq, Skv] score matrix; the custom
+    backward recomputes per-chunk probabilities from the saved (out, lse)
+    instead of differentiating through the scan — without this, autodiff
+    saves the f32 accumulator per chunk iteration and a 32k-context layer
+    costs O(n_chunks * B*H*S*dh) bytes (the 773 GiB/device failure mode).
+    """
+    key = (bool(causal), int(chunk), int(q_offset))
+    if key not in _FLASH_CACHE:
+        _FLASH_CACHE[key] = _make_flash(*key)
+    return _FLASH_CACHE[key](q, k, v)
+
+
+_FLASH_CACHE: dict = {}
+
+
+def _pad_kv(k, chunk):
+    skv = k.shape[1]
+    pad = (-skv) % chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    return k, skv
+
+
+def _fa_forward(q, k, v, causal, chunk, q_offset):
+    b, sq, h, dh = q.shape
+    hkv = k.shape[2]
+    n_rep = h // hkv
+    k, kv_valid = _pad_kv(k, chunk)
+    v, _ = _pad_kv(v, chunk)
+    n_chunks = k.shape[1] // chunk
+    scale = dh**-0.5
+    qf = q.astype(jnp.float32) * scale
+    qpos = jnp.arange(sq)[:, None] + q_offset
+
+    def body(carry, c):
+        m, l, acc = carry
+        kc = _repeat_kv(jax.lax.dynamic_slice_in_dim(k, c * chunk, chunk, 1), n_rep).astype(jnp.float32)
+        vc = _repeat_kv(jax.lax.dynamic_slice_in_dim(v, c * chunk, chunk, 1), n_rep).astype(jnp.float32)
+        logits = jnp.einsum("bqhd,bkhd->bhqk", qf, kc)
+        kpos = c * chunk + jnp.arange(chunk)[None, :]
+        valid = kpos < kv_valid
+        if causal:
+            valid = valid & (kpos <= qpos)
+        logits = jnp.where(valid[None, None], logits, -1e30)
+        m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+        p = jnp.exp(logits - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum("bhqk,bkhd->bhqd", p, vc)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, h, sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, h, sq), jnp.float32)
+    acc0 = jnp.zeros((b, h, sq, dh), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, acc0), jnp.arange(n_chunks))
+    out = (acc / jnp.maximum(l, 1e-30)[..., None]).transpose(0, 2, 1, 3).astype(q.dtype)
+    lse = m + jnp.log(jnp.maximum(l, 1e-30))         # [B, H, Sq] f32
+    return out, lse
+
+
+def _make_flash(causal, chunk, q_offset):
+    @jax.custom_vjp
+    def fa(q, k, v):
+        out, _ = _fa_forward(q, k, v, causal, chunk, q_offset)
+        return out
+
+    def fwd(q, k, v):
+        out, lse = _fa_forward(q, k, v, causal, chunk, q_offset)
+        return out, (q, k, v, out, lse)
+
+    def bwd(res, dout):
+        q, k, v, out, lse = res
+        b, sq, h, dh = q.shape
+        hkv = k.shape[2]
+        n_rep = h // hkv
+        kp, kv_valid = _pad_kv(k, chunk)
+        vp, _ = _pad_kv(v, chunk)
+        n_chunks = kp.shape[1] // chunk
+        scale = dh**-0.5
+        qf = q.astype(jnp.float32)
+        doutf = dout.astype(jnp.float32)
+        # delta = rowsum(dout * out) [B, H, Sq]
+        delta = jnp.einsum("bqhd,bqhd->bhq", doutf, out.astype(jnp.float32))
+        lse_safe = jnp.where(jnp.isfinite(lse), lse, 0.0)
+        qpos = jnp.arange(sq)[:, None] + q_offset
+
+        def body(dq, c):
+            kc = _repeat_kv(jax.lax.dynamic_slice_in_dim(kp, c * chunk, chunk, 1), n_rep).astype(jnp.float32)
+            vc = _repeat_kv(jax.lax.dynamic_slice_in_dim(vp, c * chunk, chunk, 1), n_rep).astype(jnp.float32)
+            s = jnp.einsum("bqhd,bkhd->bhqk", qf, kc) * scale
+            kpos = c * chunk + jnp.arange(chunk)[None, :]
+            valid = kpos < kv_valid
+            if causal:
+                valid = valid & (kpos <= qpos)
+            p = jnp.where(valid[None, None], jnp.exp(s - lse_safe[..., None]), 0.0)
+            dv_c = jnp.einsum("bhqk,bqhd->bkhd", p, doutf)
+            dp = jnp.einsum("bqhd,bkhd->bhqk", doutf, vc)
+            ds = p * (dp - delta[..., None]) * scale
+            dq = dq + jnp.einsum("bhqk,bkhd->bqhd", ds, kc)
+            dk_c = jnp.einsum("bhqk,bqhd->bkhd", ds, qf)
+            # sum the GQA query-head group back onto the shared KV head
+            dk_c = dk_c.reshape(b, chunk, hkv, n_rep, dh).sum(3)
+            dv_c = dv_c.reshape(b, chunk, hkv, n_rep, dh).sum(3)
+            return dq, (dk_c.astype(k.dtype), dv_c.astype(v.dtype))
+
+        dq0 = jnp.zeros((b, sq, h, dh), jnp.float32)
+        dq, (dk_chunks, dv_chunks) = jax.lax.scan(body, dq0, jnp.arange(n_chunks))
+        dk = jnp.moveaxis(dk_chunks, 0, 1).reshape(b, n_chunks * chunk, hkv, dh)[:, : k.shape[1]]
+        dv = jnp.moveaxis(dv_chunks, 0, 1).reshape(b, n_chunks * chunk, hkv, dh)[:, : v.shape[1]]
+        return dq.astype(q.dtype), dk, dv
+
+    fa.defvjp(fwd, bwd)
+    return fa

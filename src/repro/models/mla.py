@@ -1,0 +1,107 @@
+"""Multi-head Latent Attention (DeepSeek V2/V3).
+
+Train/prefill materializes per-head K/V from the latent (standard path,
+chunked flash attention).  Decode uses the *absorbed* formulation: W_uk is
+folded into the query and W_uv into the output so attention runs directly
+against the cached latent c_kv [B, S, r] + shared k_rope [B, S, dr] — the
+MLA KV-cache compression that motivates the architecture (cache is
+r + dr = 576 floats/token instead of 2 * H * dh).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import logical
+from repro.models.layers import apply_rope, chunked_attention, init_dense, rms_norm
+
+
+def init_mla(key, cfg: ArchConfig, dtype):
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    keys = jax.random.split(key, 8)
+    qin = m.q_lora_rank or d
+    p = {
+        "w_dkv": init_dense(keys[0], (d, m.kv_lora_rank), dtype),
+        "kv_ln": jnp.zeros((m.kv_lora_rank,), dtype),
+        "w_krope": init_dense(keys[1], (d, m.qk_rope_head_dim), dtype),
+        "w_uk": init_dense(keys[2], (m.kv_lora_rank, h * m.qk_nope_head_dim), dtype),
+        "w_uv": init_dense(keys[3], (m.kv_lora_rank, h * m.v_head_dim), dtype),
+        "w_uq": init_dense(keys[4], (qin, h * (m.qk_nope_head_dim + m.qk_rope_head_dim)), dtype),
+        "wo": init_dense(keys[5], (h * m.v_head_dim, d), dtype,
+                         scale=(h * m.v_head_dim) ** -0.5 / (2 * cfg.n_layers) ** 0.5),
+    }
+    if m.q_lora_rank:
+        p["w_dq"] = init_dense(keys[6], (d, m.q_lora_rank), dtype)
+        p["q_ln"] = jnp.zeros((m.q_lora_rank,), dtype)
+    return p
+
+
+def init_mla_cache(cfg: ArchConfig, batch: int, seq: int, dtype):
+    m = cfg.mla
+    return {
+        "ckv": jnp.zeros((batch, seq, m.kv_lora_rank), dtype),
+        "krope": jnp.zeros((batch, seq, m.qk_rope_head_dim), dtype),
+    }
+
+
+def _queries(params, x, positions, cfg: ArchConfig):
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    if m.q_lora_rank:
+        cq = rms_norm(x @ params["w_dq"], params["q_ln"], cfg.norm_eps)
+    else:
+        cq = x
+    q = (cq @ params["w_uq"]).reshape(b, s, h, m.qk_nope_head_dim + m.qk_rope_head_dim)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def mla_block(params, x, positions, cfg: ArchConfig, *, cache=None, cache_pos=None):
+    m = cfg.mla
+    b, s, d = x.shape
+    h = cfg.n_heads
+    q_nope, q_rope = _queries(params, x, positions, cfg)
+    ckv = rms_norm(x @ params["w_dkv"], params["kv_ln"], cfg.norm_eps)  # [B,S,r]
+    krope = apply_rope((x @ params["w_krope"])[:, :, None, :], positions, cfg.rope_theta)[:, :, 0, :]
+
+    if cache is None:
+        # materialized path (train / prefill): per-head K,V from the latent
+        k_nope = (ckv @ params["w_uk"]).reshape(b, s, h, m.qk_nope_head_dim)
+        v = (ckv @ params["w_uv"]).reshape(b, s, h, m.v_head_dim)
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        k = jnp.concatenate([k_nope, jnp.broadcast_to(krope[:, :, None, :], (b, s, h, m.qk_rope_head_dim))], axis=-1)
+        # pad V to the QK head dim so the flash kernel sees uniform shapes
+        out = chunked_attention(q, k, jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, q.shape[-1] - v.shape[-1]))),
+                                causal=cfg.causal, chunk=cfg.attn_chunk)
+        out = out[..., : m.v_head_dim]
+        new_cache = None
+    else:
+        # absorbed decode against the latent cache
+        cap = cache["ckv"].shape[1]
+        pos = jnp.minimum(cache_pos, cap - 1)            # [B] int32
+        wrt = jax.vmap(lambda c, n, p: jax.lax.dynamic_update_slice(c, n, (p, 0)))
+        ckv_c = wrt(cache["ckv"], ckv.astype(cache["ckv"].dtype), pos)
+        kr_c = wrt(cache["krope"], krope.astype(cache["krope"].dtype), pos)
+        ckv_c = logical(ckv_c, "batch", "latent_seq", None)
+        kr_c = logical(kr_c, "batch", "latent_seq", None)
+        w_uk = params["w_uk"].reshape(m.kv_lora_rank, h, m.qk_nope_head_dim)
+        q_lat = jnp.einsum("bshn,rhn->bshr", q_nope, w_uk)           # absorb W_uk
+        scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+        logits = (
+            jnp.einsum("bshr,btr->bhst", q_lat.astype(jnp.float32), ckv_c.astype(jnp.float32))
+            + jnp.einsum("bshe,bte->bhst", q_rope.astype(jnp.float32), kr_c.astype(jnp.float32))
+        ) * scale
+        mask = (jnp.arange(cap)[None, :] <= pos[:, None])[:, None, None, :]
+        logits = jnp.where(mask, logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1)
+        ctx_lat = jnp.einsum("bhst,btr->bshr", probs, ckv_c.astype(jnp.float32)).astype(x.dtype)
+        w_uv = params["w_uv"].reshape(m.kv_lora_rank, h, m.v_head_dim)
+        out = jnp.einsum("bshr,rhv->bshv", ctx_lat, w_uv)            # absorb W_uv
+        new_cache = {"ckv": ckv_c, "krope": kr_c}
+
+    out = logical(out.reshape(b, s, -1), "batch", None, "heads")
+    return (out @ params["wo"]), new_cache

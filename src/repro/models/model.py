@@ -1,0 +1,331 @@
+"""Top-level model API: build_model(cfg) -> init / loss / prefill / decode.
+
+One code path serves all 10 assigned architectures:
+  dense  : scanned GQA decoder (llama3-405b, minitron, deepseek-7b, phi4)
+  moe    : leading dense layers + scanned MLA+MoE layers (+ optional MTP)
+  ssm    : scanned RWKV6 blocks (attention-free)
+  hybrid : scanned Mamba2 + shared attention block (zamba2)
+  audio  : whisper-style enc-dec (stubbed conv frontend: frame embeddings in)
+  vlm    : dense decoder over [patch embeddings ; text tokens] (anyres stub)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from types import SimpleNamespace
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.distributed.sharding import logical
+from repro.models.attention import init_kv_cache
+from repro.models.layers import init_dense, rms_norm
+from repro.models.mla import init_mla_cache
+from repro.models.rwkv import init_rwkv, init_rwkv_cache, rwkv_block
+from repro.models.transformer import (
+    block_forward, hybrid_forward, init_block, init_hybrid, init_hybrid_cache,
+    init_stack, stack_forward,
+)
+
+
+def _sinusoid(positions, d, dtype):
+    """[..., S] -> [..., S, d] sinusoidal embedding (whisper-style)."""
+    half = d // 2
+    freqs = jnp.exp(-jnp.arange(half, dtype=jnp.float32) * (jnp.log(10000.0) / max(half - 1, 1)))
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+def _cross_entropy(logits, labels, mask=None):
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if mask is not None:
+        nll = nll * mask
+        denom = jnp.maximum(jnp.sum(mask), 1.0)
+    else:
+        denom = nll.size
+    return jnp.sum(nll) / denom
+
+
+# ---------------------------------------------------------------------------
+
+
+def build_model(cfg: ArchConfig):
+    dtype = cfg.cdtype()
+    pdtype = cfg.pdtype()
+    fam = cfg.family
+
+    # ------------------------------------------------------------- init ----
+    def init(key) -> dict:
+        ks = jax.random.split(key, 8)
+        params: dict[str, Any] = {
+            "embed": {"embedding": init_dense(ks[0], (cfg.vocab_size, cfg.d_model), pdtype, scale=1.0)},
+            "final_ln": jnp.zeros((cfg.d_model,), pdtype),
+        }
+        if not cfg.tie_embeddings:
+            params["unembed"] = init_dense(ks[1], (cfg.d_model, cfg.vocab_size), pdtype)
+        if fam in ("dense", "vlm"):
+            params["layers"] = init_stack(ks[2], cfg, cfg.n_layers, pdtype, kind="dense")
+        elif fam == "moe":
+            nd = cfg.moe.first_dense_layers
+            if nd:
+                params["dense_layers"] = init_stack(ks[2], cfg, nd, pdtype,
+                                                    kind="dense", d_ff=cfg.moe.dense_d_ff)
+            params["layers"] = init_stack(ks[3], cfg, cfg.n_layers - nd, pdtype, kind="moe")
+            if cfg.mtp:
+                params["mtp"] = {
+                    "proj": init_dense(ks[4], (2 * cfg.d_model, cfg.d_model), pdtype),
+                    "ln_h": jnp.zeros((cfg.d_model,), pdtype),
+                    "ln_e": jnp.zeros((cfg.d_model,), pdtype),
+                    "block": init_block(ks[5], cfg, pdtype, kind="moe"),
+                    "final_ln": jnp.zeros((cfg.d_model,), pdtype),
+                }
+        elif fam == "ssm":
+            params["layers"] = jax.vmap(lambda k: init_rwkv(k, cfg, pdtype))(
+                jax.random.split(ks[2], cfg.n_layers))
+        elif fam == "hybrid":
+            params["layers"] = init_hybrid(ks[2], cfg, pdtype)
+        elif fam == "audio":
+            params["encoder"] = init_stack(ks[2], cfg, cfg.enc_dec.n_encoder_layers,
+                                           pdtype, kind="dense")
+            params["layers"] = init_stack(ks[3], cfg, cfg.n_layers, pdtype, kind="decoder_cross")
+        else:
+            raise ValueError(fam)
+        return params
+
+    # -------------------------------------------------------- backbones ----
+    def _cast(params):
+        """Cast float params to the compute dtype (storage stays param_dtype)."""
+        return jax.tree.map(
+            lambda p: p.astype(dtype) if jnp.issubdtype(p.dtype, jnp.floating) else p,
+            params)
+
+    def _embed(params, tokens):
+        x = params["embed"]["embedding"].astype(dtype)[tokens]
+        return logical(x, "batch", "seq", "embed")
+
+    def _head(params, x):
+        x = rms_norm(x, params["final_ln"], cfg.norm_eps)
+        w = (params["embed"]["embedding"].T if cfg.tie_embeddings else params["unembed"]).astype(dtype)
+        logits = x @ w
+        return logical(logits, "batch", None, "vocab")
+
+    def _encoder(params, frames):
+        # stubbed frontend: frames are precomputed embeddings [B, F, D]
+        f = frames.shape[1]
+        x = frames.astype(dtype) + _sinusoid(jnp.arange(f), cfg.d_model, dtype)[None]
+        x, _, _ = stack_forward(params["encoder"], x, jnp.arange(f), cfg,
+                                kind="dense", n_layers=cfg.enc_dec.n_encoder_layers,
+                                causal=False, use_rope=False)
+        return x
+
+    def _cross_kv(params, enc_out):
+        """Per-decoder-layer cross K/V from encoder output (vmap over layers)."""
+        b, f, _ = enc_out.shape
+        hd = cfg.resolved_head_dim
+
+        def one(layer_p):
+            k = (enc_out @ layer_p["cross"]["wk"].astype(dtype)).reshape(b, f, cfg.n_kv_heads, hd)
+            v = (enc_out @ layer_p["cross"]["wv"].astype(dtype)).reshape(b, f, cfg.n_kv_heads, hd)
+            return k, v
+
+        return jax.vmap(one)(params["layers"]) if cfg.scan_layers else None
+
+    def _backbone(params, x, positions, *, cache=None, cache_pos=None, cross_kv=None):
+        """Returns (hidden, new_cache, aux_loss_sum)."""
+        aux = jnp.zeros((), jnp.float32)
+        if fam in ("dense", "vlm"):
+            x, new_cache, _ = stack_forward(params["layers"], x, positions, cfg,
+                                            kind="dense", n_layers=cfg.n_layers,
+                                            cache=cache, cache_pos=cache_pos)
+            return x, new_cache, aux
+        if fam == "moe":
+            nd = cfg.moe.first_dense_layers
+            dc = mc = None
+            if cache is not None:
+                dc, mc = cache.get("dense"), cache["moe"]
+            new_dense = None
+            if nd:
+                x, new_dense, _ = stack_forward(params["dense_layers"], x, positions, cfg,
+                                                kind="dense", n_layers=nd,
+                                                cache=dc, cache_pos=cache_pos)
+            x, new_moe, aux = stack_forward(params["layers"], x, positions, cfg,
+                                            kind="moe", n_layers=cfg.n_layers - nd,
+                                            cache=mc, cache_pos=cache_pos)
+            new_cache = None
+            if cache is not None:
+                new_cache = {"dense": new_dense, "moe": new_moe}
+            return x, new_cache, aux
+        if fam == "ssm":
+            def body(carry, xs):
+                xc = carry
+                layer_params, layer_cache = xs
+                xc, nc = rwkv_block(layer_params, xc, cfg, cache=layer_cache)
+                return xc, nc
+            if cfg.remat:
+                body = jax.checkpoint(body, prevent_cse=False)
+            x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
+            return x, (new_cache if cache is not None else None), aux
+        if fam == "hybrid":
+            x, new_cache = hybrid_forward(params["layers"], x, positions, cfg,
+                                          cache=cache, cache_pos=cache_pos)
+            return x, new_cache, aux
+        if fam == "audio":
+            x, new_cache, _ = stack_forward(params["layers"], x, positions, cfg,
+                                            kind="decoder_cross", n_layers=cfg.n_layers,
+                                            cache=cache, cache_pos=cache_pos, cross_kv=cross_kv)
+            return x, new_cache, aux
+        raise ValueError(fam)
+
+    # ----------------------------------------------------------- losses ----
+    def loss_fn(params, batch):
+        params = _cast(params)
+        tokens = batch["tokens"]
+        inputs, labels = tokens[:, :-1], tokens[:, 1:]
+        s = inputs.shape[1]
+        x = _embed(params, inputs)
+        mask = None
+        cross_kv = None
+        if fam == "vlm":
+            patches = batch["patches"].astype(dtype)
+            x = jnp.concatenate([patches, x], axis=1)
+            labels = jnp.concatenate(
+                [jnp.zeros(patches.shape[:2], labels.dtype), labels], axis=1)
+            mask = jnp.concatenate(
+                [jnp.zeros(patches.shape[:2], jnp.float32),
+                 jnp.ones((inputs.shape[0], s), jnp.float32)], axis=1)
+            s = x.shape[1]
+        if fam == "audio":
+            enc_out = _encoder(params, batch["frames"])
+            cross_kv = _cross_kv(params, enc_out)
+            x = x + _sinusoid(jnp.arange(s), cfg.d_model, dtype)[None]
+        positions = jnp.arange(s)
+        h, _, aux = _backbone(params, x, positions, cross_kv=cross_kv)
+        logits = _head(params, h)
+        loss = _cross_entropy(logits, labels, mask)
+        metrics = {"lm_loss": loss}
+        if fam == "moe":
+            metrics["aux_loss"] = aux
+            loss = loss + cfg.moe.aux_loss_weight * aux
+            if cfg.mtp:
+                mtp_loss = _mtp_loss(params, h, tokens)
+                metrics["mtp_loss"] = mtp_loss
+                loss = loss + cfg.mtp_loss_weight * mtp_loss
+        metrics["loss"] = loss
+        return loss, metrics
+
+    def _mtp_loss(params, h, tokens):
+        """DeepSeek-V3 MTP depth-1: predict t+2 from (h_t, emb_{t+1})."""
+        p = params["mtp"]
+        inputs, nxt, tgt = tokens[:, :-2], tokens[:, 1:-1], tokens[:, 2:]
+        h = h[:, : inputs.shape[1]]
+        e = _embed(params, nxt)
+        z = jnp.concatenate([rms_norm(h, p["ln_h"], cfg.norm_eps),
+                             rms_norm(e, p["ln_e"], cfg.norm_eps)], axis=-1) @ p["proj"].astype(dtype)
+        z, _, _ = block_forward(p["block"], z, jnp.arange(z.shape[1]), cfg, kind="moe")
+        logits = _head(params, z)
+        return _cross_entropy(logits, tgt)
+
+    # ------------------------------------------------------------ serve ----
+    def prefill(params, batch):
+        """Full-context forward; returns last-token logits."""
+        params = _cast(params)
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        x = _embed(params, tokens)
+        cross_kv = None
+        if fam == "vlm":
+            x = jnp.concatenate([batch["patches"].astype(dtype), x], axis=1)
+            s = x.shape[1]
+        if fam == "audio":
+            enc_out = _encoder(params, batch["frames"])
+            cross_kv = _cross_kv(params, enc_out)
+            x = x + _sinusoid(jnp.arange(s), cfg.d_model, dtype)[None]
+        positions = jnp.arange(s)
+        h, _, _ = _backbone(params, x, positions, cross_kv=cross_kv)
+        return _head(params, h[:, -1:, :])[:, 0]
+
+    def decode_step(params, cache, token, pos):
+        """One token with a filled KV/state cache. token [B], pos [B]."""
+        params = _cast(params)
+        x = _embed(params, token[:, None])
+        cross_kv = None
+        if fam == "audio":
+            cross_kv = cache["cross"]
+            x = x + _sinusoid(pos[:, None], cfg.d_model, dtype)
+            h, new_self, _ = _backbone(params, x, pos[:, None], cache=cache["self"],
+                                       cache_pos=pos, cross_kv=cross_kv)
+            new_cache = {"self": new_self, "cross": cache["cross"]}
+        else:
+            h, new_cache, _ = _backbone(params, x, pos[:, None], cache=cache, cache_pos=pos)
+        logits = _head(params, h)[:, 0]
+        return logits, new_cache
+
+    # ------------------------------------------------------------ cache ----
+    def init_cache(batch: int, seq: int):
+        cdt = dtype
+        if fam in ("dense", "vlm"):
+            if cfg.attention == "mla":
+                one = lambda _: init_mla_cache(cfg, batch, seq, cdt)
+            else:
+                one = lambda _: init_kv_cache(cfg, batch, seq, cdt)
+            return jax.vmap(one)(jnp.arange(cfg.n_layers))
+        if fam == "moe":
+            nd = cfg.moe.first_dense_layers
+            one = lambda _: init_mla_cache(cfg, batch, seq, cdt)
+            out = {"moe": jax.vmap(one)(jnp.arange(cfg.n_layers - nd))}
+            out["dense"] = jax.vmap(one)(jnp.arange(nd)) if nd else None
+            return out
+        if fam == "ssm":
+            return jax.vmap(lambda _: init_rwkv_cache(cfg, batch, cdt))(jnp.arange(cfg.n_layers))
+        if fam == "hybrid":
+            return init_hybrid_cache(cfg, batch, seq, cdt)
+        if fam == "audio":
+            f = cfg.enc_dec.n_frames
+            hd = cfg.resolved_head_dim
+            self_c = jax.vmap(lambda _: init_kv_cache(cfg, batch, seq, cdt))(jnp.arange(cfg.n_layers))
+            cross = (
+                jnp.zeros((cfg.n_layers, batch, f, cfg.n_kv_heads, hd), cdt),
+                jnp.zeros((cfg.n_layers, batch, f, cfg.n_kv_heads, hd), cdt),
+            )
+            return {"self": self_c, "cross": cross}
+        raise ValueError(fam)
+
+    # ------------------------------------------------------ input specs ----
+    def input_specs(shape: ShapeConfig) -> dict:
+        b, s = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        if shape.kind == "train":
+            specs = {"tokens": jax.ShapeDtypeStruct((b, _text_len(s) + 1), i32)}
+            specs.update(_frontend_specs(b, s))
+            return specs
+        if shape.kind == "prefill":
+            specs = {"tokens": jax.ShapeDtypeStruct((b, _text_len(s)), i32)}
+            specs.update(_frontend_specs(b, s))
+            return specs
+        # decode: cache of capacity s + one token
+        cache = jax.eval_shape(lambda: init_cache(b, s))
+        return {
+            "cache": cache,
+            "token": jax.ShapeDtypeStruct((b,), i32),
+            "pos": jax.ShapeDtypeStruct((b,), i32),
+        }
+
+    def _text_len(s):
+        return s - cfg.vlm.n_patches if fam == "vlm" else s
+
+    def _frontend_specs(b, s):
+        if fam == "vlm":
+            return {"patches": jax.ShapeDtypeStruct((b, cfg.vlm.n_patches, cfg.d_model), dtype)}
+        if fam == "audio":
+            return {"frames": jax.ShapeDtypeStruct((b, cfg.enc_dec.n_frames, cfg.d_model), dtype)}
+        return {}
+
+    return SimpleNamespace(
+        cfg=cfg, init=init, loss_fn=loss_fn, prefill=prefill,
+        decode_step=decode_step, init_cache=init_cache, input_specs=input_specs,
+    )

@@ -1,0 +1,220 @@
+"""RWKV-6 "Finch" block — attention-free, data-dependent per-channel decay.
+
+Per head (dim P), state S [P_k, P_v]:
+    S_t = diag(w_t) S_{t-1} + k_t (x) v_t         w_t = exp(-exp(wdec_t))
+    o_t = r_t . (S_{t-1} + diag(u) k_t (x) v_t)
+with w_t data-dependent through a low-rank MLP (the V6 headline feature).
+Time mixing uses the V6 token-shift; channel mixing is the standard RWKV
+squared-ReLU FFN.  Sequential lax.scan over time (decode is the same cell).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import logical
+from repro.models.layers import init_dense, rms_norm
+
+
+def init_rwkv(key, cfg: ArchConfig, dtype):
+    d = cfg.d_model
+    ks = jax.random.split(key, 12)
+    lora = max(32, d // 32)
+    p = {
+        "time": {
+            "mix": 0.5 * jnp.ones((5, d), dtype),                  # r,k,v,w,g shift mixes
+            "wr": init_dense(ks[0], (d, d), dtype),
+            "wk": init_dense(ks[1], (d, d), dtype),
+            "wv": init_dense(ks[2], (d, d), dtype),
+            "wg": init_dense(ks[3], (d, d), dtype),
+            "w0": jnp.full((d,), -6.0, jnp.float32),               # base log-log decay
+            "w_lora_a": init_dense(ks[4], (d, lora), dtype, scale=0.01),
+            "w_lora_b": init_dense(ks[5], (lora, d), dtype, scale=0.01),
+            "u": jnp.zeros((d,), jnp.float32),                     # bonus
+            "wo": init_dense(ks[6], (d, d), dtype, scale=d**-0.5 / (2 * cfg.n_layers) ** 0.5),
+            "ln_x": jnp.zeros((d,), dtype),
+        },
+        "channel": {
+            "mix": 0.5 * jnp.ones((2, d), dtype),
+            "wk": init_dense(ks[7], (d, cfg.d_ff), dtype),
+            "wv": init_dense(ks[8], (cfg.d_ff, d), dtype,
+                             scale=cfg.d_ff**-0.5 / (2 * cfg.n_layers) ** 0.5),
+            "wr": init_dense(ks[9], (d, d), dtype),
+        },
+    }
+    return p
+
+
+def init_rwkv_cache(cfg: ArchConfig, batch: int, dtype):
+    d = cfg.d_model
+    hd = cfg.rwkv.head_dim
+    h = d // hd
+    return {
+        "state": jnp.zeros((batch, h, hd, hd), jnp.float32),
+        "x_time": jnp.zeros((batch, d), dtype),
+        "x_chan": jnp.zeros((batch, d), dtype),
+    }
+
+
+def _token_shift(x, last=None):
+    """previous-token features; `last` seeds position -1 (decode cache)."""
+    if last is None:
+        pad = jnp.zeros_like(x[:, :1])
+    else:
+        pad = last[:, None, :]
+    return jnp.concatenate([pad, x[:, :-1]], axis=1)
+
+
+def _wkv_scan(r, k, v, w, u, state, chunk: int = 64):
+    """r,k,v [B,T,H,P]; w [B,T,H,P] decay in (0,1); state [B,H,P,P].
+
+    Two-level scan: outer scan over time chunks with a rematerialized body,
+    inner scan over steps.  Plain one-level autodiff would save the
+    [B,H,P,P] state for *every* timestep (43 GiB/device for the 4k train
+    cell); chunked remat keeps only one carry per chunk.
+    """
+    t = r.shape[1]
+    q = min(chunk, t)
+    pad = (-t) % q
+    def prep(a, fill):
+        return jnp.moveaxis(jnp.pad(a.astype(jnp.float32),
+                                    ((0, 0), (0, pad), (0, 0), (0, 0)),
+                                    constant_values=fill), 1, 0)
+    # pad decay with 1 (identity) so the carried state survives padding
+    xs = (prep(r, 0), prep(k, 0), prep(v, 0), prep(w, 1))
+    nc = (t + pad) // q
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp                                  # [B,H,P]
+        kv = kt[..., :, None] * vt[..., None, :]              # [B,H,P,P]
+        out = jnp.einsum("bhp,bhpq->bhq", rt, s + u[None, :, :, None] * kv)
+        s = wt[..., :, None] * s + kv
+        return s, out
+
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def chunk_body(s, inp):
+        return jax.lax.scan(step, s, inp)
+
+    xs_c = tuple(a.reshape(nc, q, *a.shape[1:]) for a in xs)
+    state, outs = jax.lax.scan(chunk_body, state, xs_c)
+    outs = outs.reshape(nc * q, *outs.shape[2:])[:t]
+    return jnp.moveaxis(outs, 0, 1), state                    # [B,T,H,P]
+
+
+def _wkv_chunked_parallel(r, k, v, w, u, state, chunk: int = 16):
+    """Chunked *parallel* WKV (§Perf hillclimb, EXPERIMENTS.md).
+
+    The sequential scan reads+writes the [B,H,P,P] state every timestep —
+    the dominant HBM traffic of the whole model (memory-roofline term).
+    Within a chunk the recurrence unrolls to an attention-like quadratic
+    form with per-channel decay ratios computed stably in log space:
+
+        out_t = (r_t . W_{t-1}) S_in  +  sum_{s<t} [r_t k_s exp(L_{t-1}-L_s)] v_s
+                + (r_t . u . k_t) v_t
+        S_out = exp(L_Q) . S_in + sum_s exp(L_Q - L_s) k_s (x) v_s
+
+    so the state is touched once per chunk (HBM traffic / chunk) and the
+    inner products run on the MXU.  Exponents are clamped at +-30 — decays
+    small enough to underflow contribute nothing by construction.
+    """
+    b, t, h, pdim = r.shape
+    q = min(chunk, t)
+    pad = (-t) % q
+    def prep(a, fill=0.0):
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)), constant_values=fill)
+        return jnp.moveaxis(a.reshape(b, -1, q, h, pdim), 1, 0)   # [nc,B,Q,H,P]
+    rc, kc, vc, wc = prep(r), prep(k), prep(v), prep(w, 1.0)
+    # factorization exp(L_{t-1}-L_s) = exp(L_{t-1}) exp(-L_s) is exact while
+    # |L| <= clamp: chunk 16 x per-step log-decay >= -3 stays within +-48
+    # (covers RWKV's w = exp(-exp(.)) init and trained regimes; the "scan"
+    # mode remains the exact fallback for pathological decays)
+    clamp = lambda x: jnp.clip(x, -50.0, 50.0)
+    tri = (jnp.arange(q)[:, None] > jnp.arange(q)[None, :])[None, None, :, :]
+
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def per_chunk(s_in, inp):
+        # decay factors computed per chunk (f32) so no whole-sequence f32
+        # tensors are ever materialized (peak-memory §Perf iteration);
+        # rematerialized in backward — only the chunk state carry is saved
+        rq, kq, vq, wq = (a.astype(jnp.float32) for a in inp)     # [B,Q,H,P]
+        logw = jnp.log(jnp.maximum(wq, 1e-38))
+        lc = jnp.cumsum(logw, axis=1)                    # L_t (inclusive)
+        rdq = rq * jnp.exp(clamp(lc - logw))             # r_t exp(L_{t-1})
+        kdq = kq * jnp.exp(clamp(-lc))                   # k_s exp(-L_s)
+        # inter-chunk: r_t exp(L_{t-1}) @ S_in
+        y_inter = jnp.einsum("bqhk,bhkv->bqhv", rdq, s_in)
+        # intra-chunk quadratic form with strict lower-triangular mask
+        att = jnp.einsum("bqhk,bshk->bhqs", rdq, kdq)
+        att = jnp.where(tri, att, 0.0)                   # [B,H,Q,S]
+        y_intra = jnp.einsum("bhqs,bshv->bqhv", att, vq)
+        # bonus diagonal: (r_t . u . k_t) v_t
+        y_diag = jnp.sum(rq * u[None, None] * kq, -1, keepdims=True) * vq
+        # state update
+        l_q = lc[:, -1:, :, :]                           # L_Q
+        k_out = kq * jnp.exp(clamp(l_q - lc))
+        s_out = jnp.exp(clamp(l_q[:, 0]))[..., :, None] * s_in \
+            + jnp.einsum("bshk,bshv->bhkv", k_out, vq)
+        return s_out, (y_inter + y_intra + y_diag).astype(r.dtype)
+
+    state, ys = jax.lax.scan(per_chunk, state, (rc, kc, vc, wc))
+    out = jnp.moveaxis(ys, 0, 1).reshape(b, -1, h, pdim)[:, :t]
+    return out, state
+
+
+def rwkv_time_mix(p, x, cfg: ArchConfig, cache=None):
+    d = cfg.d_model
+    hd = cfg.rwkv.head_dim
+    h = d // hd
+    b, t, _ = x.shape
+    last = cache["x_time"] if cache is not None else None
+    xprev = _token_shift(x, last)
+    mix = p["mix"]
+    xr = x + (xprev - x) * mix[0]
+    xk = x + (xprev - x) * mix[1]
+    xv = x + (xprev - x) * mix[2]
+    xw = x + (xprev - x) * mix[3]
+    xg = x + (xprev - x) * mix[4]
+    r = (xr @ p["wr"]).reshape(b, t, h, hd)
+    k = (xk @ p["wk"]).reshape(b, t, h, hd)
+    v = (xv @ p["wv"]).reshape(b, t, h, hd)
+    g = jax.nn.silu(xg @ p["wg"])
+    # data-dependent decay (V6): w = exp(-exp(w0 + lora(xw)))
+    dec = p["w0"][None, None, :] + (jnp.tanh(xw @ p["w_lora_a"]) @ p["w_lora_b"]).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(dec)).reshape(b, t, h, hd)
+    u = p["u"].reshape(h, hd)
+    state = cache["state"] if cache is not None else jnp.zeros((b, h, hd, hd), jnp.float32)
+    if cache is None and cfg.rwkv.wkv_mode == "chunked":
+        out, new_state = _wkv_chunked_parallel(r, k, v, w, u, state)
+    else:
+        out, new_state = _wkv_scan(r, k, v, w, u, state)
+    out = rms_norm(out.reshape(b, t, d).astype(x.dtype), p["ln_x"], cfg.norm_eps)
+    out = (out * g) @ p["wo"]
+    new_cache = None
+    if cache is not None:
+        new_cache = {"state": new_state, "x_time": x[:, -1, :]}
+    return out, new_cache
+
+
+def rwkv_channel_mix(p, x, cfg: ArchConfig, cache=None):
+    last = cache["x_chan"] if cache is not None else None
+    xprev = _token_shift(x, last)
+    xk = x + (xprev - x) * p["mix"][0]
+    xr = x + (xprev - x) * p["mix"][1]
+    k = jnp.square(jax.nn.relu(xk @ p["wk"]))
+    k = logical(k, "batch", None, "ffn")
+    out = jax.nn.sigmoid(xr @ p["wr"]) * (k @ p["wv"])
+    return out, (x[:, -1, :] if cache is not None else None)
+
+
+def rwkv_block(params, x, cfg: ArchConfig, *, cache=None):
+    tm, tc = rwkv_time_mix(params["time"], x, cfg, cache)
+    x = x + tm
+    cm, cc = rwkv_channel_mix(params["channel"], x, cfg, cache)
+    x = x + cm
+    new_cache = None
+    if cache is not None:
+        new_cache = {**tc, "x_chan": cc}
+    return x, new_cache

@@ -1,0 +1,146 @@
+"""Mamba-2 (SSD) block — chunked state-space scan.
+
+Recurrence per head h with state [N, P]:
+    S_t = a_t * S_{t-1} + dt_t * (B_t  (x) x_t)      a_t = exp(dt_t * A_h)
+    y_t = C_t^T S_t + D_h * x_t
+
+Chunked formulation (Mamba-2 paper): a single lax.scan over chunks carries
+the inter-chunk state; within a chunk the contribution is an attention-like
+quadratic form masked by cumulative decay, so the transient is
+[B, Q, Q, H] per chunk instead of [B, T, H, N, P] for a full associative
+scan — the memory property that makes prefill_32k lowerable.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import logical
+from repro.models.layers import init_dense, rms_norm
+
+
+def init_mamba(key, cfg: ArchConfig, dtype):
+    s = cfg.ssm
+    d = cfg.d_model
+    din = s.expand * d
+    h = din // s.head_dim
+    ks = jax.random.split(key, 8)
+    return {
+        "in_proj": init_dense(ks[0], (d, 2 * din), dtype),              # x, z
+        "w_bc": init_dense(ks[1], (d, 2 * s.state_dim), dtype),         # B, C
+        "w_dt": init_dense(ks[2], (d, h), dtype),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "a_log": jnp.zeros((h,), jnp.float32),                          # A = -exp(a_log)
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "conv": init_dense(ks[3], (s.conv_width, din), dtype, scale=0.5),
+        "norm": jnp.zeros((din,), dtype),
+        "out_proj": init_dense(ks[4], (din, d), dtype,
+                               scale=din**-0.5 / (2 * cfg.n_layers) ** 0.5),
+    }
+
+
+def init_ssm_cache(cfg: ArchConfig, batch: int, dtype):
+    s = cfg.ssm
+    din = s.expand * cfg.d_model
+    h = din // s.head_dim
+    return {
+        "state": jnp.zeros((batch, h, s.state_dim, s.head_dim), jnp.float32),
+        "conv": jnp.zeros((batch, s.conv_width - 1, din), dtype),
+    }
+
+
+def _causal_conv(xs, conv_w, conv_state=None):
+    """Depthwise causal conv, width W.  xs [B,T,din], conv_w [W,din]."""
+    w = conv_w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((xs.shape[0], w - 1, xs.shape[2]), xs.dtype)
+    else:
+        pad = conv_state
+    xp = jnp.concatenate([pad, xs], axis=1)
+    out = sum(xp[:, i : i + xs.shape[1], :] * conv_w[i][None, None, :] for i in range(w))
+    new_state = xp[:, -(w - 1):, :] if w > 1 else None
+    return out, new_state
+
+
+def _ssd_chunked(xh, bt, ct, dt, a_log, chunk: int):
+    """xh [B,T,H,P], bt/ct [B,T,N], dt [B,T,H] (post-softplus).  f32 scan."""
+    b, t, h, p = xh.shape
+    n = bt.shape[-1]
+    q = min(chunk, t)
+    pad = (-t) % q
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        bt = jnp.pad(bt, ((0, 0), (0, pad), (0, 0)))
+        ct = jnp.pad(ct, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    tp = t + pad
+    nc = tp // q
+    a = -jnp.exp(a_log)                                     # [H]
+    loga = dt * a[None, None, :]                            # [B,T,H] log-decay
+    xc = xh.reshape(b, nc, q, h, p).astype(jnp.float32)
+    bc = bt.reshape(b, nc, q, n).astype(jnp.float32)
+    cc = ct.reshape(b, nc, q, n).astype(jnp.float32)
+    dc = dt.reshape(b, nc, q, h).astype(jnp.float32)
+    lc = loga.reshape(b, nc, q, h).astype(jnp.float32)
+
+    def per_chunk(state, inputs):
+        xq, bq, cq, dq, lq = inputs                          # [B,Q,...]
+        cla = jnp.cumsum(lq, axis=1)                         # [B,Q,H]
+        # inter-chunk: y_i += C_i . (exp(cla_i) * S_in)
+        decay_in = jnp.exp(cla)                              # [B,Q,H]
+        y_inter = jnp.einsum("bqn,bhnp->bqhp", cq, state) * decay_in[..., None]
+        # intra-chunk quadratic form
+        g = jnp.einsum("bqn,bkn->bqk", cq, bq)               # [B,Q,Q]
+        dd = cla[:, :, None, :] - cla[:, None, :, :]         # [B,Q,K,H]
+        mask = (jnp.arange(q)[:, None] >= jnp.arange(q)[None, :])[None, :, :, None]
+        w = jnp.where(mask, jnp.exp(dd) * g[..., None], 0.0) * dq[:, None, :, :]
+        y_intra = jnp.einsum("bqkh,bkhp->bqhp", w, xq)
+        # state update: S_out = exp(cla_Q) * S_in + sum_j exp(cla_Q - cla_j) dt_j B_j (x) x_j
+        decay_out = jnp.exp(cla[:, -1:, :] - cla)            # [B,Q,H]
+        sb = jnp.einsum("bqh,bqn,bqhp->bhnp", decay_out * dq, bq, xq)
+        state = jnp.exp(cla[:, -1, :])[:, :, None, None] * state + sb
+        return state, y_inter + y_intra
+
+    s0 = jnp.zeros((b, h, n, p), jnp.float32)
+    xs = tuple(jnp.moveaxis(arr, 1, 0) for arr in (xc, bc, cc, dc, lc))
+    state, ys = jax.lax.scan(per_chunk, s0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, tp, h, p)[:, :t]
+    return y, state
+
+
+def mamba_block(params, x, cfg: ArchConfig, *, cache=None):
+    """x [B, T, D] -> (out, new_cache)."""
+    s = cfg.ssm
+    b, t, d = x.shape
+    din = s.expand * d
+    h = din // s.head_dim
+    xz = x @ params["in_proj"]
+    xs, z = jnp.split(xz, 2, axis=-1)
+    xs = logical(xs, "batch", None, "heads")
+    conv_state = cache["conv"] if cache is not None else None
+    xs, new_conv = _causal_conv(xs, params["conv"], conv_state)
+    xs = jax.nn.silu(xs)
+    bc = x @ params["w_bc"]
+    bt, ct = jnp.split(bc, 2, axis=-1)
+    dt = jax.nn.softplus(x.astype(jnp.float32) @ params["w_dt"].astype(jnp.float32)
+                         + params["dt_bias"][None, None, :])
+    xh = xs.reshape(b, t, h, s.head_dim)
+
+    if cache is None:
+        y, _ = _ssd_chunked(xh, bt, ct, dt, params["a_log"], s.chunk)
+        new_cache = None
+    else:
+        # single-step recurrence
+        a = -jnp.exp(params["a_log"])
+        decay = jnp.exp(dt[:, 0] * a[None, :])               # [B,H]
+        sb = jnp.einsum("bh,bn,bhp->bhnp", dt[:, 0], bt[:, 0].astype(jnp.float32),
+                        xh[:, 0].astype(jnp.float32))
+        state = decay[:, :, None, None] * cache["state"] + sb
+        y = jnp.einsum("bn,bhnp->bhp", ct[:, 0].astype(jnp.float32), state)[:, None]
+        new_cache = {"state": state, "conv": new_conv}
+
+    y = y + params["d_skip"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(b, t, din).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"], cfg.norm_eps)
+    return y @ params["out_proj"], new_cache

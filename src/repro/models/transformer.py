@@ -1,0 +1,188 @@
+"""Layer stacks: scanned homogeneous blocks + heterogeneous assemblies.
+
+All stacks scan over layers (stacked [L, ...] param leaves) with optional
+remat — compile time stays O(1) in depth, which is what makes the 126-layer
+405B dry-run tractable, and is the production idiom (MaxText-style).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import logical
+from repro.models.attention import attention_block, init_attention, init_kv_cache
+from repro.models.layers import init_dense, rms_norm, swiglu
+from repro.models.mla import init_mla, init_mla_cache, mla_block
+from repro.models.moe import init_moe, moe_block
+from repro.models.rwkv import init_rwkv, init_rwkv_cache, rwkv_block
+from repro.models.ssm import init_mamba, init_ssm_cache, mamba_block
+
+
+# ---------------------------------------------------------------------------
+# single block (attention/mla + mlp/moe), used by dense/moe/enc-dec stacks
+# ---------------------------------------------------------------------------
+
+def init_block(key, cfg: ArchConfig, dtype, *, kind: str, d_ff: int | None = None):
+    """kind: dense | moe | encoder | decoder_cross"""
+    ks = jax.random.split(key, 6)
+    d = cfg.d_model
+    p: dict[str, Any] = {"ln1": jnp.zeros((d,), dtype)}
+    if cfg.attention == "mla":
+        p["attn"] = init_mla(ks[0], cfg, dtype)
+    else:
+        p["attn"] = init_attention(ks[0], cfg, dtype)
+    if kind == "decoder_cross":
+        p["ln_cross"] = jnp.zeros((d,), dtype)
+        p["cross"] = init_attention(ks[1], cfg, dtype)
+    p["ln2"] = jnp.zeros((d,), dtype)
+    if kind == "moe":
+        p["mlp"] = init_moe(ks[2], cfg, dtype)
+    else:
+        ff = d_ff or cfg.d_ff
+        p["mlp"] = {
+            "w1": init_dense(ks[2], (d, ff), dtype),
+            "w3": init_dense(ks[3], (d, ff), dtype),
+            "w2": init_dense(ks[4], (ff, d), dtype, scale=ff**-0.5 / (2 * cfg.n_layers) ** 0.5),
+        }
+    return p
+
+
+def block_forward(params, x, positions, cfg: ArchConfig, *, kind: str,
+                  cache=None, cache_pos=None, cross_kv=None, causal=True, use_rope=True):
+    h = rms_norm(x, params["ln1"], cfg.norm_eps)
+    if cfg.attention == "mla":
+        attn_out, new_cache = mla_block(params["attn"], h, positions, cfg,
+                                        cache=cache, cache_pos=cache_pos)
+    else:
+        attn_out, new_cache = attention_block(params["attn"], h, positions, cfg,
+                                              causal=causal, use_rope=use_rope,
+                                              cache=cache, cache_pos=cache_pos)
+    x = x + attn_out
+    if kind == "decoder_cross":
+        h = rms_norm(x, params["ln_cross"], cfg.norm_eps)
+        c_out, _ = attention_block(params["cross"], h, positions, cfg, cross_kv=cross_kv)
+        x = x + c_out
+    h = rms_norm(x, params["ln2"], cfg.norm_eps)
+    aux = None
+    if kind == "moe":
+        mlp_out, aux = moe_block(params["mlp"], h, cfg)
+    else:
+        mlp_out = swiglu(h, **params["mlp"])
+    x = x + mlp_out
+    x = logical(x, "batch", "seq", "embed")
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# scanned homogeneous stack
+# ---------------------------------------------------------------------------
+
+def init_stack(key, cfg: ArchConfig, n_layers: int, dtype, *, kind: str, d_ff=None):
+    keys = jax.random.split(key, n_layers)
+    if cfg.scan_layers:
+        return jax.vmap(lambda k: init_block(k, cfg, dtype, kind=kind, d_ff=d_ff))(keys)
+    return [init_block(k, cfg, dtype, kind=kind, d_ff=d_ff) for k in keys]
+
+
+def stack_forward(params, x, positions, cfg: ArchConfig, *, kind: str, n_layers: int,
+                  cache=None, cache_pos=None, cross_kv=None, causal=True, use_rope=True):
+    """Scan over a stacked [L, ...] block-param pytree. Returns (x, cache, aux)."""
+
+    def body(carry, xs):
+        xc, aux_acc = carry
+        layer_params, layer_cache, layer_cross = xs
+        xc, new_cache, aux = block_forward(
+            layer_params, xc, positions, cfg, kind=kind, cache=layer_cache,
+            cache_pos=cache_pos, cross_kv=layer_cross, causal=causal, use_rope=use_rope)
+        if aux is not None:
+            aux_acc = aux_acc + aux["aux_loss"]
+        return (xc, aux_acc), new_cache
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+
+    if cfg.scan_layers:
+        (x, aux_sum), new_caches = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                                (params, cache, cross_kv))
+    else:
+        aux_sum = jnp.zeros((), jnp.float32)
+        new_caches = []
+        for i in range(n_layers):
+            (x, aux_sum), nc = body(
+                (x, aux_sum),
+                (params[i], None if cache is None else cache[i],
+                 None if cross_kv is None else jax.tree.map(lambda c: c[i], cross_kv)))
+            new_caches.append(nc)
+    return x, new_caches, aux_sum
+
+
+# ---------------------------------------------------------------------------
+# hybrid (zamba2-like): scanned Mamba2 layers + one shared attention block
+# ---------------------------------------------------------------------------
+
+def init_hybrid(key, cfg: ArchConfig, dtype):
+    k1, k2 = jax.random.split(key)
+    p = {"mamba": jax.vmap(lambda k: init_mamba(k, cfg, dtype))(jax.random.split(k1, cfg.n_layers))}
+    if cfg.ssm.shared_stride:
+        p["shared"] = init_block(k2, cfg, dtype, kind="dense", d_ff=cfg.ssm.shared_d_ff)
+    return p
+
+
+def n_shared_apps(cfg: ArchConfig) -> int:
+    s = cfg.ssm.shared_stride
+    return 0 if not s else (cfg.n_layers + s - 1) // s
+
+
+def hybrid_forward(params, x, positions, cfg: ArchConfig, *, cache=None, cache_pos=None):
+    """cache = {'ssm': stacked [L,...], 'shared': stacked [n_apps,...]} or None."""
+    stride = cfg.ssm.shared_stride
+    apps = n_shared_apps(cfg)
+    decode = cache is not None
+
+    def body(carry, xs):
+        xc, shared_cache = carry
+        layer_params, layer_cache, idx = xs
+        xc, new_ssm_cache = mamba_block(layer_params, xc, cfg, cache=layer_cache)
+
+        if stride:
+            def with_shared(args):
+                xc, shared_cache = args
+                app = idx // stride
+                if decode:
+                    this = jax.tree.map(lambda c: c[app], shared_cache)
+                    out, new_c, _ = block_forward(params["shared"], xc, positions, cfg,
+                                                  kind="dense", cache=this, cache_pos=cache_pos)
+                    shared_cache = jax.tree.map(
+                        lambda full, n: jax.lax.dynamic_update_index_in_dim(full, n, app, 0),
+                        shared_cache, new_c)
+                else:
+                    out, _, _ = block_forward(params["shared"], xc, positions, cfg, kind="dense")
+                return out, shared_cache
+
+            apply = (idx % stride) == 0
+            xc, shared_cache = jax.lax.cond(apply, with_shared, lambda a: a, (xc, shared_cache))
+        return (xc, shared_cache), new_ssm_cache
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+
+    shared_cache = cache["shared"] if decode and stride else ()
+    ssm_cache = cache["ssm"] if decode else None
+    idxs = jnp.arange(cfg.n_layers, dtype=jnp.int32)
+    (x, shared_cache), new_ssm = jax.lax.scan(
+        body, (x, shared_cache), (params["mamba"], ssm_cache, idxs))
+    new_cache = {"ssm": new_ssm, "shared": shared_cache} if decode else None
+    return x, new_cache
+
+
+def init_hybrid_cache(cfg: ArchConfig, batch: int, seq: int, dtype):
+    apps = n_shared_apps(cfg)
+    ssm = jax.vmap(lambda _: init_ssm_cache(cfg, batch, dtype))(jnp.arange(cfg.n_layers))
+    out = {"ssm": ssm, "shared": ()}
+    if apps:
+        out["shared"] = jax.vmap(lambda _: init_kv_cache(cfg, batch, seq, dtype))(jnp.arange(apps))
+    return out

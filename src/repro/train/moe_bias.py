@@ -1,0 +1,29 @@
+"""Aux-loss-free MoE load balancing (DeepSeek-V3, arXiv:2408.15664).
+
+The router bias is a *non-trainable* parameter adjusted from observed
+expert load: overloaded experts get their selection bias decreased,
+underloaded increased. Applied by the trainer between optimizer steps for
+``router='sigmoid_bias'`` archs (the bias enters top-k selection only, not
+the combine weights, so this is gradient-free).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def update_router_bias(params, expert_load, rate: float = 1e-3):
+    """expert_load: [E] mean load (1.0 == perfectly balanced).
+
+    Returns params with every ``router/bias`` leaf nudged by
+    -rate * sign(load - 1) (stacked [L, E] biases accept [E] or [L, E] load).
+    """
+
+    def visit(path, leaf):
+        pstr = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        if pstr.endswith("router/bias"):
+            err = jnp.sign(expert_load.astype(jnp.float32) - 1.0)
+            return (leaf.astype(jnp.float32) - rate * err).astype(leaf.dtype)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(visit, params)

@@ -1,0 +1,71 @@
+"""Generic train_step over any (arch, optimizer) pair — the function the
+multi-pod dry-run lowers for the train_4k shapes.
+
+Supports microbatch gradient accumulation (cfg.grad_accum): the global
+batch is split into microbatches scanned sequentially, so live activations
+scale with the microbatch while the optimizer sees the full-batch gradient.
+Accumulation dtype follows cfg.optimizer_dtype.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.train.optimizer import AdamWConfig, AdamWState, adamw_update, init_adamw
+
+
+def make_train_step(model, opt_cfg: AdamWConfig, grad_shardings=None):
+    """grad_shardings: optional NamedSharding pytree (the params shardings).
+    Constraining the accumulator to the *param* shardings makes GSPMD
+    reduce-scatter each microbatch's cotangents into the sharded buffer
+    instead of all-reducing a replicated one — ZeRO gradient sharding
+    (§Perf: cut the llama3-405b per-micro grad all-reduce)."""
+    n_micro = max(1, model.cfg.grad_accum)
+    acc_dtype = jnp.dtype(model.cfg.optimizer_dtype)
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(model.loss_fn, has_aux=True)(params, batch)
+
+    def _constrain(tree):
+        if grad_shardings is None:
+            return tree
+        return jax.tree.map(
+            lambda x, s: jax.lax.with_sharding_constraint(x, s), tree, grad_shardings)
+
+    def train_step(params, opt_state: AdamWState, batch):
+        if n_micro == 1:
+            (loss, metrics), grads = grads_of(params, batch)
+            grads = _constrain(grads)
+        else:
+            micro = jax.tree.map(
+                lambda x: x.reshape(n_micro, x.shape[0] // n_micro, *x.shape[1:]), batch)
+
+            def body(acc, mb):
+                (loss, metrics), g = grads_of(params, mb)
+                acc = jax.tree.map(
+                    lambda a, gi: (a + gi.astype(acc_dtype) / n_micro), acc, _constrain(g))
+                return acc, (loss, metrics)
+
+            zeros = _constrain(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, acc_dtype), params))
+            grads, (losses, metricses) = jax.lax.scan(body, zeros, micro)
+            loss = jnp.mean(losses)
+            metrics = jax.tree.map(lambda m: jnp.mean(m, axis=0), metricses)
+        new_params, new_opt, opt_metrics = adamw_update(grads, opt_state, params, opt_cfg)
+        metrics = {**metrics, **opt_metrics, "loss_mean": loss}
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_opt_init(model, opt_cfg: AdamWConfig):
+    def opt_init(params):
+        return init_adamw(params, opt_cfg)
+
+    return opt_init
+
+
+def opt_config_for(cfg) -> AdamWConfig:
+    return AdamWConfig(moment_dtype=cfg.optimizer_dtype, factored=cfg.optimizer_factored)

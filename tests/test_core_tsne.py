@@ -1,0 +1,397 @@
+"""Core BH t-SNE correctness: every step validated against the exact oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    DEFAULT_DEPTH, attractive_forces_edges, attractive_forces_ell,
+    bh_gradient, binary_search_perplexity, build_quadtree, knn,
+    morton_encode, perplexity_of, sort_points_by_code, span_radius, summarize,
+)
+from repro.core import exact, similarity
+from repro.core.bsp import binary_search_perplexity as bsp_search
+from repro.core.repulsive import bh_repulsion_sorted
+from repro.core.tsne import TsneConfig, run_tsne
+
+
+def make_points(n, seed=0, clusters=4, dim=2, std=0.2):
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(size=(clusters, dim)) * 3.0
+    lab = rng.integers(0, clusters, size=n)
+    return (centers[lab] + rng.normal(size=(n, dim)) * std).astype(np.float32), lab
+
+
+# ---------------------------------------------------------------- morton ----
+class TestMorton:
+    def test_known_example_from_paper(self):
+        # paper fig. 2: dim0 = 3 (011b), dim1 = 7 (111b) -> morton 101111b = 47
+        from repro.core.morton import expand_bits_u32
+        mx = int(expand_bits_u32(jnp.uint32(3)))
+        my = int(expand_bits_u32(jnp.uint32(7)))
+        assert mx | (my << 1) == 47
+
+    def test_encode_monotone_along_z_order(self):
+        # points on a 4x4 grid follow the Z curve ordering of fig. 2
+        depth = 2
+        xs, ys = np.meshgrid(np.arange(4), np.arange(4), indexing="ij")
+        pts = np.stack([xs.ravel(), ys.ravel()], -1).astype(np.float32) + 0.5
+        cent = jnp.asarray([2.0, 2.0])
+        r = jnp.asarray(2.0)
+        codes = np.asarray(morton_encode(jnp.asarray(pts), cent, r, depth=depth))
+        expect = np.zeros(16, np.uint32)
+        for i, (x, y) in enumerate(pts):
+            xi, yi = int(x), int(y)
+            code = 0
+            for b in range(2):
+                code |= ((xi >> b) & 1) << (2 * b)
+                code |= ((yi >> b) & 1) << (2 * b + 1)
+            expect[i] = code
+        assert (codes == expect).all()
+
+    def test_locality(self):
+        y, _ = make_points(512, seed=1)
+        cent, r = span_radius(jnp.asarray(y))
+        codes = morton_encode(jnp.asarray(y), cent, r)
+        order = np.argsort(np.asarray(codes))
+        ys = y[order]
+        # consecutive points in Z order should be close on average
+        dz = np.linalg.norm(np.diff(ys, axis=0), axis=1).mean()
+        rng = np.random.default_rng(0)
+        drand = np.linalg.norm(ys[rng.permutation(512)][:-1] - ys[rng.permutation(512)][1:], axis=1).mean()
+        assert dz < 0.5 * drand
+
+
+# -------------------------------------------------------------- quadtree ----
+class TestQuadtree:
+    @pytest.mark.parametrize("n", [1, 2, 7, 64, 500])
+    @pytest.mark.parametrize("compress", [True, False])
+    def test_tree_invariants(self, n, compress):
+        y, _ = make_points(n, seed=n)
+        yj = jnp.asarray(y)
+        cent, r = span_radius(yj)
+        codes = morton_encode(yj, cent, r)
+        cs, ys, perm = sort_points_by_code(yj, codes)
+        tree = build_quadtree(cs, compress=compress)
+        nn = int(tree.n_nodes)
+        cap = 2 * n + 1 if compress else 17 * n + 1
+        assert 1 <= nn <= cap - 1
+        start = np.asarray(tree.start)[:nn]
+        end = np.asarray(tree.end)[:nn]
+        level = np.asarray(tree.level)[:nn]
+        skip = np.asarray(tree.skip)[:nn]
+        # root covers everything
+        assert start[0] == 0 and end[0] == n
+        # DFS pre-order: starts non-decreasing; ranges laminar
+        assert (np.diff(start) >= 0).all()
+        for k in range(nn):
+            assert 0 <= start[k] < end[k] <= n
+            # skip points to first node at/after our end
+            assert skip[k] <= nn
+            if skip[k] < nn:
+                assert start[skip[k]] >= end[k]
+            # children immediately follow and are contained
+            if skip[k] != k + 1 and k + 1 < nn:
+                assert start[k + 1] >= start[k] and end[k + 1] <= end[k]
+                assert level[k + 1] > level[k]
+
+    def test_children_partition_parent(self):
+        n = 300
+        y, _ = make_points(n, seed=3)
+        yj = jnp.asarray(y)
+        cent, r = span_radius(yj)
+        codes = morton_encode(yj, cent, r)
+        cs, ys, _ = sort_points_by_code(yj, codes)
+        tree = build_quadtree(cs)
+        nn = int(tree.n_nodes)
+        start = np.asarray(tree.start)[:nn]
+        end = np.asarray(tree.end)[:nn]
+        skip = np.asarray(tree.skip)[:nn]
+        for k in range(nn):
+            if skip[k] == k + 1:
+                continue  # leaf
+            # walk direct children via skip pointers: they partition [start, end)
+            c = k + 1
+            covered = start[k]
+            while c < nn and start[c] < end[k]:
+                assert start[c] == covered
+                covered = end[c]
+                c = skip[c]
+            assert covered == end[k]
+
+    def test_compressed_node_count_bound(self):
+        n = 1000
+        y, _ = make_points(n, seed=7)
+        yj = jnp.asarray(y)
+        cent, r = span_radius(yj)
+        codes = morton_encode(yj, cent, r)
+        cs, _, _ = sort_points_by_code(yj, codes)
+        tree = build_quadtree(cs)
+        assert int(tree.n_nodes) <= 2 * n - 1
+
+    def test_duplicate_points(self):
+        y = np.zeros((16, 2), np.float32)
+        y[8:] = 1.0
+        yj = jnp.asarray(y)
+        cent, r = span_radius(yj)
+        codes = morton_encode(yj, cent, r)
+        cs, ys, _ = sort_points_by_code(yj, codes)
+        tree = build_quadtree(cs)
+        nn = int(tree.n_nodes)
+        counts = np.asarray(tree.end - tree.start)[:nn]
+        leaves = np.asarray(tree.is_leaf)[:nn]
+        # two max-depth leaves of 8 coincident points each + root
+        assert sorted(counts[leaves].tolist()) == [8, 8]
+
+
+# -------------------------------------------------------------- summarize ---
+class TestSummarize:
+    def test_com_matches_bruteforce(self):
+        n = 200
+        y, _ = make_points(n, seed=5)
+        yj = jnp.asarray(y)
+        cent, r = span_radius(yj)
+        codes = morton_encode(yj, cent, r)
+        cs, ys, _ = sort_points_by_code(yj, codes)
+        tree = build_quadtree(cs)
+        summ = summarize(tree, ys, r)
+        nn = int(tree.n_nodes)
+        ysn = np.asarray(ys)
+        for k in range(0, nn, 7):
+            s, e = int(tree.start[k]), int(tree.end[k])
+            np.testing.assert_allclose(
+                np.asarray(summ.com[k]), ysn[s:e].mean(0), rtol=1e-4, atol=2e-5
+            )
+            assert float(summ.count[k]) == e - s
+
+
+# -------------------------------------------------------------- repulsive ---
+class TestRepulsive:
+    def _bh_forces(self, y, theta):
+        yj = jnp.asarray(y)
+        cent, r = span_radius(yj)
+        codes = morton_encode(yj, cent, r)
+        cs, ys, perm = sort_points_by_code(yj, codes)
+        tree = build_quadtree(cs)
+        summ = summarize(tree, ys, r)
+        rep = bh_repulsion_sorted(ys, tree, summ, theta)
+        inv = np.empty(y.shape[0], np.int64)
+        inv[np.asarray(perm)] = np.arange(y.shape[0])
+        return np.asarray(rep.force)[inv], float(jnp.sum(rep.z_per_point))
+
+    def test_theta_zero_is_exact(self):
+        y, _ = make_points(150, seed=11)
+        f_bh, z_bh = self._bh_forces(y, theta=0.0)
+        f_ex, z_ex = exact.exact_repulsion(jnp.asarray(y))
+        np.testing.assert_allclose(z_bh, float(z_ex), rtol=1e-4)
+        np.testing.assert_allclose(f_bh, np.asarray(f_ex), rtol=2e-3, atol=1e-5)
+
+    @pytest.mark.parametrize("theta", [0.2, 0.5, 0.8])
+    def test_bh_approximation_quality(self, theta):
+        y, _ = make_points(400, seed=13)
+        f_bh, z_bh = self._bh_forces(y, theta)
+        f_ex, z_ex = exact.exact_repulsion(jnp.asarray(y))
+        f_ex = np.asarray(f_ex)
+        rel_z = abs(z_bh - float(z_ex)) / float(z_ex)
+        assert rel_z < 0.02 * max(theta, 0.1)
+        denom = np.linalg.norm(f_ex, axis=1) + 1e-8
+        rel_f = np.linalg.norm(f_bh - f_ex, axis=1) / denom
+        # BH guarantee is on aggregate field accuracy; mean relative error
+        assert rel_f.mean() < 0.05
+
+    def test_coincident_points_no_nan(self):
+        y = np.zeros((32, 2), np.float32)
+        f, z = self._bh_forces(y, theta=0.5)
+        assert np.isfinite(f).all() and np.isfinite(z)
+        np.testing.assert_allclose(f, 0.0, atol=1e-6)
+        # z = sum over ordered pairs of (1+0)^-1 = n(n-1)
+        np.testing.assert_allclose(z, 32 * 31, rtol=1e-5)
+
+    def test_auto_depth_matches_exact(self):
+        from repro.core.morton import auto_depth
+        y, _ = make_points(400, seed=211)
+        depth = auto_depth(400)
+        assert 6 <= depth < 16
+        yj = jnp.asarray(y)
+        cent, r = span_radius(yj)
+        codes = morton_encode(yj, cent, r, depth=depth)
+        cs, ys, perm = sort_points_by_code(yj, codes)
+        tree = build_quadtree(cs, depth=depth)
+        summ = summarize(tree, ys, r)
+        rep = bh_repulsion_sorted(ys, tree, summ, 0.0)
+        f_ex, z_ex = exact.exact_repulsion(ys)
+        np.testing.assert_allclose(float(jnp.sum(rep.z_per_point)), float(z_ex), rtol=1e-3)
+        # finite depth merges co-cell points: assert aggregate accuracy
+        err = np.linalg.norm(np.asarray(rep.force) - np.asarray(f_ex), axis=1)
+        ref = np.linalg.norm(np.asarray(f_ex), axis=1) + 1e-8
+        assert np.mean(err / ref) < 0.02
+        assert np.quantile(err / ref, 0.99) < 0.2
+
+    def test_uncompressed_tree_same_forces(self):
+        y, _ = make_points(200, seed=17)
+        yj = jnp.asarray(y)
+        cent, r = span_radius(yj)
+        codes = morton_encode(yj, cent, r)
+        cs, ys, _ = sort_points_by_code(yj, codes)
+        f = {}
+        for compress in (True, False):
+            tree = build_quadtree(cs, compress=compress)
+            summ = summarize(tree, ys, r)
+            rep = bh_repulsion_sorted(ys, tree, summ, 0.0)
+            f[compress] = np.asarray(rep.force)
+        np.testing.assert_allclose(f[True], f[False], rtol=1e-4, atol=1e-6)
+
+
+# -------------------------------------------------------------- attractive --
+class TestAttractive:
+    def test_ell_vs_dense_oracle(self):
+        n, k = 128, 12
+        x, _ = make_points(n, seed=19, dim=8)
+        idx, d2 = knn(jnp.asarray(x), k)
+        cond_p, _ = bsp_search(d2, 5.0)
+        sym_cols, sym_vals = similarity.symmetrize_ell(idx, cond_p)
+        p_dense = similarity.dense_p_matrix(idx, cond_p)
+        y, _ = make_points(n, seed=23)
+        f_ell, kl_ell = attractive_forces_ell(
+            jnp.asarray(y), jnp.asarray(sym_cols), jnp.asarray(sym_vals, jnp.float32)
+        )
+        f_ex, kl_ex = exact.exact_attraction(jnp.asarray(y), jnp.asarray(p_dense, jnp.float32))
+        np.testing.assert_allclose(np.asarray(f_ell), np.asarray(f_ex), rtol=1e-4, atol=1e-7)
+        np.testing.assert_allclose(float(kl_ell), float(kl_ex), rtol=1e-4)
+
+    def test_components_vs_ell(self):
+        from repro.core.attractive import attractive_forces_ell_components
+        n, k = 128, 12
+        x, _ = make_points(n, seed=101, dim=8)
+        idx, d2 = knn(jnp.asarray(x), k)
+        cond_p, _ = bsp_search(d2, 5.0)
+        sym_cols, sym_vals = similarity.symmetrize_ell(idx, cond_p)
+        y, _ = make_points(n, seed=103)
+        f_a, kl_a = attractive_forces_ell(
+            jnp.asarray(y), jnp.asarray(sym_cols), jnp.asarray(sym_vals, jnp.float32))
+        f_b, kl_b = attractive_forces_ell_components(
+            jnp.asarray(y), jnp.asarray(sym_cols), jnp.asarray(sym_vals, jnp.float32))
+        np.testing.assert_allclose(np.asarray(f_b), np.asarray(f_a), rtol=1e-5, atol=1e-8)
+        np.testing.assert_allclose(float(kl_b), float(kl_a), rtol=1e-6)
+
+    def test_edges_vs_ell(self):
+        n, k = 96, 10
+        x, _ = make_points(n, seed=29, dim=6)
+        idx, d2 = knn(jnp.asarray(x), k)
+        cond_p, _ = bsp_search(d2, 4.0)
+        sym_cols, sym_vals = similarity.symmetrize_ell(idx, cond_p)
+        src, dst, w = similarity.edge_list(idx, cond_p)
+        y, _ = make_points(n, seed=31)
+        f_ell, kl_ell = attractive_forces_ell(
+            jnp.asarray(y), jnp.asarray(sym_cols), jnp.asarray(sym_vals, jnp.float32)
+        )
+        f_edges, kl_edges = attractive_forces_edges(jnp.asarray(y), src, dst, w)
+        np.testing.assert_allclose(np.asarray(f_edges), np.asarray(f_ell), rtol=1e-4, atol=1e-7)
+        np.testing.assert_allclose(float(kl_edges), float(kl_ell), rtol=1e-4)
+
+
+# --------------------------------------------------------------------- bsp --
+class TestBSP:
+    @pytest.mark.parametrize("perplexity", [5.0, 15.0, 30.0])
+    def test_perplexity_reached(self, perplexity):
+        n, k = 256, int(3 * perplexity)
+        x, _ = make_points(n, seed=37, dim=10)
+        idx, d2 = knn(jnp.asarray(x), k)
+        cond_p, beta = binary_search_perplexity(d2, perplexity)
+        perp = np.asarray(perplexity_of(cond_p))
+        np.testing.assert_allclose(perp, perplexity, rtol=1e-2)
+        assert (np.asarray(beta) > 0).all()
+        np.testing.assert_allclose(np.asarray(cond_p).sum(1), 1.0, rtol=1e-5)
+
+
+# --------------------------------------------------------------------- knn --
+class TestKNN:
+    @pytest.mark.parametrize("n,dim,k", [(100, 4, 5), (1000, 16, 15), (257, 20, 7)])
+    def test_matches_bruteforce(self, n, dim, k):
+        rng = np.random.default_rng(41)
+        x = rng.normal(size=(n, dim)).astype(np.float32)
+        idx, d2 = knn(jnp.asarray(x), k)
+        d = ((x[:, None, :] - x[None, :, :]) ** 2).sum(-1)
+        np.fill_diagonal(d, np.inf)
+        ref_idx = np.argsort(d, axis=1)[:, :k]
+        ref_d = np.take_along_axis(d, ref_idx, axis=1)
+        np.testing.assert_allclose(np.sort(np.asarray(d2), 1), np.sort(ref_d, 1), rtol=1e-3, atol=1e-4)
+        # index sets must match (distance ties allowed)
+        same = [set(np.asarray(idx)[i]) == set(ref_idx[i]) for i in range(n)]
+        assert np.mean(same) > 0.99
+
+    def test_no_self_neighbor(self):
+        x = np.random.default_rng(43).normal(size=(300, 8)).astype(np.float32)
+        idx, _ = knn(jnp.asarray(x), 10)
+        assert not (np.asarray(idx) == np.arange(300)[:, None]).any()
+
+
+# -------------------------------------------------------- full BH gradient --
+class TestGradient:
+    def test_bh_gradient_matches_exact(self):
+        n, k, perp = 200, 24, 8.0
+        x, _ = make_points(n, seed=47, dim=12)
+        idx, d2 = knn(jnp.asarray(x), k)
+        cond_p, _ = bsp_search(d2, perp)
+        sym_cols, sym_vals = similarity.symmetrize_ell(idx, cond_p)
+        p_dense = similarity.dense_p_matrix(idx, cond_p)
+        y, _ = make_points(n, seed=53)
+        res = bh_gradient(
+            jnp.asarray(y), jnp.asarray(sym_cols), jnp.asarray(sym_vals, jnp.float32),
+            None, theta=0.0, exaggeration=1.0, depth=DEFAULT_DEPTH, p_logp=0.0,
+        )
+        g_ex = exact.exact_gradient(jnp.asarray(y), jnp.asarray(p_dense, jnp.float32))
+        np.testing.assert_allclose(np.asarray(res.grad), np.asarray(g_ex), rtol=5e-3, atol=1e-6)
+
+    def test_kl_estimate_matches_exact(self):
+        n, k, perp = 150, 15, 5.0
+        x, _ = make_points(n, seed=59, dim=12)
+        idx, d2 = knn(jnp.asarray(x), k)
+        cond_p, _ = bsp_search(d2, perp)
+        sym_cols, sym_vals = similarity.symmetrize_ell(idx, cond_p)
+        p_dense = similarity.dense_p_matrix(idx, cond_p)
+        pv = sym_vals[sym_vals > 0]
+        p_logp = float((pv * np.log(pv)).sum())
+        y, _ = make_points(n, seed=61)
+        res = bh_gradient(
+            jnp.asarray(y), jnp.asarray(sym_cols), jnp.asarray(sym_vals, jnp.float32),
+            None, theta=0.0, exaggeration=1.0, depth=DEFAULT_DEPTH, p_logp=p_logp,
+        )
+        kl_ex = exact.exact_kl(jnp.asarray(y), jnp.asarray(p_dense, jnp.float32))
+        np.testing.assert_allclose(float(res.kl), float(kl_ex), rtol=1e-3)
+
+
+# ------------------------------------------------------------- end-to-end ---
+class TestEndToEnd:
+    def test_tsne_separates_clusters(self):
+        n = 600
+        x, lab = make_points(n, seed=67, clusters=3, dim=20, std=0.15)
+        cfg = TsneConfig(perplexity=15.0, n_iter=300, exaggeration_iters=100,
+                         momentum_switch_iter=100, seed=1)
+        res = run_tsne(x, cfg, kl_every=100)
+        assert np.isfinite(res.y).all()
+        assert np.isfinite(res.kl)
+        # KL decreased over the run
+        assert res.kl_history[-1, 1] <= res.kl_history[0, 1] + 1e-3
+        # cluster separation: mean intra-cluster dist << inter-cluster dist
+        y = res.y
+        intra, inter = [], []
+        for c in range(3):
+            m = y[lab == c]
+            intra.append(np.linalg.norm(m - m.mean(0), axis=1).mean())
+        cents = np.stack([y[lab == c].mean(0) for c in range(3)])
+        for i in range(3):
+            for j in range(i + 1, 3):
+                inter.append(np.linalg.norm(cents[i] - cents[j]))
+        assert np.mean(intra) < 0.5 * np.mean(inter)
+
+    def test_edges_impl_close_to_ell(self):
+        n = 300
+        x, _ = make_points(n, seed=71, clusters=3, dim=10)
+        kl = {}
+        for impl in ("ell", "edges"):
+            cfg = TsneConfig(perplexity=10.0, n_iter=150, exaggeration_iters=50,
+                             momentum_switch_iter=50, attractive_impl=impl, seed=2)
+            kl[impl] = run_tsne(x, cfg, kl_every=150).kl_history[-1, 1]
+        # identical forces; KL differs only by the constant-sum-p-log-p estimate
+        assert abs(kl["ell"] - kl["edges"]) < 0.5

@@ -1,0 +1,102 @@
+"""Distributed paths on 8 forced host devices — run in a subprocess so the
+main pytest process keeps its single-device view."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_sub(code: str):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env, timeout=900)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr[-4000:]}"
+    return out.stdout
+
+
+def test_distributed_bh_gradient_matches_single_device():
+    run_sub("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import tsne, similarity, bsp
+        from repro.core.knn import knn
+        from repro.core.distributed import distributed_bh_gradient
+        mesh = jax.make_mesh((8,), ("data",))
+        n, k = 512, 12
+        rng = np.random.default_rng(0)
+        x = rng.normal(size=(n, 10)).astype(np.float32)
+        idx, d2 = knn(jnp.asarray(x), k)
+        cond_p, _ = bsp.binary_search_perplexity(d2, 4.0)
+        cols, vals = similarity.symmetrize_ell(idx, cond_p)
+        y = jnp.asarray(rng.normal(size=(n, 2)).astype(np.float32))
+        ref = tsne.bh_gradient(y, jnp.asarray(cols), jnp.asarray(vals, jnp.float32),
+                               None, theta=0.5, exaggeration=2.0, depth=16, p_logp=0.0)
+        got = distributed_bh_gradient(mesh, y, jnp.asarray(cols),
+                                      jnp.asarray(vals, jnp.float32), 0.0,
+                                      theta=0.5, exaggeration=2.0)
+        np.testing.assert_allclose(np.asarray(got.grad), np.asarray(ref.grad),
+                                   rtol=2e-3, atol=1e-6)
+        np.testing.assert_allclose(float(got.kl), float(ref.kl), rtol=1e-3)
+        print("distributed gradient OK")
+    """)
+
+
+def test_ring_knn_matches_local():
+    run_sub("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core.knn import knn
+        from repro.core.distributed import ring_knn
+        mesh = jax.make_mesh((8,), ("data",))
+        rng = np.random.default_rng(3)
+        x = jnp.asarray(rng.normal(size=(640, 16)).astype(np.float32))
+        i1, d1 = knn(x, 9)
+        i2, d2 = ring_knn(mesh, x, 9)
+        np.testing.assert_allclose(np.sort(np.asarray(d2), 1), np.sort(np.asarray(d1), 1),
+                                   rtol=1e-4, atol=1e-4)
+        same = [set(np.asarray(i1)[r]) == set(np.asarray(i2)[r]) for r in range(640)]
+        assert np.mean(same) > 0.99
+        print("ring knn OK")
+    """)
+
+
+def test_compressed_psum_accuracy():
+    run_sub("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from repro.distributed.compression import compressed_psum
+        mesh = jax.make_mesh((8,), ("data",))
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.normal(size=(8, 128)).astype(np.float32))
+        exact = np.asarray(x).sum(0)
+        got = jax.shard_map(lambda v: compressed_psum(v[0], "data"),
+                            mesh=mesh, in_specs=P("data"), out_specs=P(None),
+                            check_vma=False)(x)
+        scale = np.abs(x).max() / 127.0
+        assert np.max(np.abs(np.asarray(got) - exact)) <= 8 * scale
+        print("compressed psum OK")
+    """)
+
+
+def test_moe_ep_shard_map_matches_local():
+    run_sub("""
+        import dataclasses, jax, jax.numpy as jnp, numpy as np
+        from repro.configs import get_reduced_config
+        from repro.distributed.sharding import use_mesh_rules, DEFAULT_RULES
+        from repro.models.moe import init_moe, moe_block
+        cfg = get_reduced_config("deepseek_v2_lite_16b")
+        cfg = dataclasses.replace(cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=64.0))
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        params = init_moe(jax.random.PRNGKey(0), cfg, jnp.float32)
+        x = jax.random.normal(jax.random.PRNGKey(1), (4, 8, cfg.d_model), jnp.float32)
+        out_local, _ = moe_block(params, x, cfg)              # no mesh: local path
+        with use_mesh_rules(mesh, DEFAULT_RULES):
+            out_ep = jax.jit(lambda p, v: moe_block(p, v, cfg)[0])(params, x)
+        np.testing.assert_allclose(np.asarray(out_ep), np.asarray(out_local),
+                                   rtol=2e-4, atol=2e-5)
+        print("moe ep OK")
+    """)

@@ -1,0 +1,31 @@
+"""FIt-SNE baseline (FFT-interpolation repulsion) vs the exact oracle."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.exact import exact_repulsion
+from repro.core.fft_repulsion import fft_repulsion
+
+
+@pytest.mark.parametrize("n,boxes,tol", [(500, 48, 0.05), (2000, 96, 0.01)])
+def test_matches_exact(n, boxes, tol):
+    rng = np.random.default_rng(0)
+    y = jnp.asarray(rng.normal(size=(n, 2)).astype(np.float32) * 5)
+    f, z = fft_repulsion(y, n_boxes=boxes)
+    fe, ze = exact_repulsion(y)
+    assert abs(float(z) - float(ze)) / float(ze) < tol
+    num = np.linalg.norm(np.asarray(f - fe), axis=1)
+    den = np.linalg.norm(np.asarray(fe), axis=1) + 1e-9
+    assert np.mean(num / den) < tol
+
+
+def test_clustered_points():
+    rng = np.random.default_rng(1)
+    c = rng.normal(size=(4, 2)) * 8
+    y = jnp.asarray((c[rng.integers(0, 4, 800)] +
+                     rng.normal(size=(800, 2)) * 0.3).astype(np.float32))
+    f, z = fft_repulsion(y, n_boxes=96)
+    fe, ze = exact_repulsion(y)
+    assert abs(float(z) - float(ze)) / float(ze) < 0.02
+    np.testing.assert_allclose(np.asarray(f).sum(0), np.asarray(fe).sum(0),
+                               rtol=0.1, atol=1e-2)

@@ -1,0 +1,71 @@
+"""HLO-text cost analyzer vs known ground truth (incl. loop multiplication —
+the thing XLA's own cost_analysis gets wrong for scans)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.hlo_cost import analyze_hlo
+
+
+def _hlo(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_matmul_flops():
+    a = jnp.zeros((128, 256), jnp.float32)
+    b = jnp.zeros((256, 64), jnp.float32)
+    res = analyze_hlo(_hlo(lambda x, y: x @ y, a, b))
+    want = 2 * 128 * 256 * 64
+    assert want <= res["flops"] <= want * 1.2, res["flops"]
+
+
+def test_scan_multiplies_flops():
+    a = jnp.zeros((128, 128), jnp.float32)
+
+    def f(x):
+        def body(c, _):
+            return c @ a, None
+        out, _ = jax.lax.scan(body, x, None, length=10)
+        return out
+
+    res = analyze_hlo(_hlo(f, a))
+    want = 10 * 2 * 128**3
+    assert want * 0.9 <= res["flops"] <= want * 1.3, res["flops"]
+
+
+def test_nested_scan_trips():
+    a = jnp.zeros((64, 64), jnp.float32)
+
+    def f(x):
+        def outer(c, _):
+            def inner(ci, _):
+                return ci @ a, None
+            c, _ = jax.lax.scan(inner, c, None, length=5)
+            return c, None
+        out, _ = jax.lax.scan(outer, x, None, length=4)
+        return out
+
+    res = analyze_hlo(_hlo(f, a))
+    want = 20 * 2 * 64**3
+    assert want * 0.9 <= res["flops"] <= want * 1.5, res["flops"]
+
+
+def test_bytes_scale_with_loop():
+    x = jnp.zeros((1024, 1024), jnp.float32)
+
+    def f(v):
+        def body(c, _):
+            return c * 2.0 + 1.0, None
+        out, _ = jax.lax.scan(body, v, None, length=7)
+        return out
+
+    res = analyze_hlo(_hlo(f, x))
+    # each iteration reads+writes ~4MB x2 ops (may fuse to one)
+    per_iter = 1024 * 1024 * 4
+    assert res["bytes"] >= 7 * 2 * per_iter * 0.8, res["bytes"]
+
+
+def test_elementwise_flops_counted():
+    x = jnp.zeros((1000,), jnp.float32)
+    res = analyze_hlo(_hlo(lambda v: jnp.exp(v) + v * 2.0, x))
+    assert 2000 <= res["flops"] <= 10000, res["flops"]

@@ -1,0 +1,68 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import morton as morton_ref
+from repro.core import _pairwise as pairwise_ref
+from repro.core import attractive as attractive_ref
+from repro.kernels.attractive_kernel import attractive_forces_ell_pallas
+from repro.kernels.morton_kernel import morton_encode_pallas
+from repro.kernels.pairwise_kernel import pairwise_sq_dists_pallas
+
+
+@pytest.mark.parametrize("n", [1, 100, 1024, 2500])
+@pytest.mark.parametrize("depth", [8, 16])
+def test_morton_kernel_matches_ref(n, depth):
+    rng = np.random.default_rng(n)
+    y = jnp.asarray(rng.normal(size=(n, 2)).astype(np.float32) * 10)
+    cent, r = morton_ref.span_radius(y)
+    ref = morton_ref.morton_encode(y, cent, r, depth=depth)
+    out = morton_encode_pallas(y, cent, r, depth=depth)
+    assert (np.asarray(out) == np.asarray(ref)).all()
+
+
+@pytest.mark.parametrize("nq,nc,d", [(64, 64, 8), (128, 256, 20), (300, 500, 64), (1000, 777, 784)])
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_pairwise_kernel_matches_ref(nq, nc, d, dtype):
+    rng = np.random.default_rng(nq + nc)
+    q = jnp.asarray(rng.normal(size=(nq, d)), dtype)
+    c = jnp.asarray(rng.normal(size=(nc, d)), dtype)
+    ref = pairwise_ref.pairwise_sq_dists(q, c)
+    out = pairwise_sq_dists_pallas(q, c)
+    np.testing.assert_allclose(np.asarray(out), np.maximum(np.asarray(ref), 0), rtol=2e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("n,w", [(10, 3), (256, 90), (1000, 33)])
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_attractive_kernel_matches_ref(n, w, dtype):
+    rng = np.random.default_rng(n + w)
+    y = jnp.asarray(rng.normal(size=(n, 2)), dtype)
+    cols = jnp.asarray(rng.integers(0, n, size=(n, w)), jnp.int32)
+    vals = jnp.asarray(rng.uniform(0, 1e-3, size=(n, w)), dtype)
+    f_ref, kl_ref = attractive_ref.attractive_forces_ell(y, cols, vals)
+    f, kl = attractive_forces_ell_pallas(y, cols, vals)
+    np.testing.assert_allclose(np.asarray(f), np.asarray(f_ref), rtol=1e-5, atol=1e-7)
+    np.testing.assert_allclose(float(kl), float(kl_ref), rtol=1e-5)
+
+
+def test_knn_with_pallas_pairwise_matches_xla():
+    from repro.core.knn import knn
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.normal(size=(500, 16)).astype(np.float32))
+    i1, d1 = knn(x, 10, pairwise_fn_name="xla")
+    i2, d2 = knn(x, 10, pairwise_fn_name="pallas")
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(d2), rtol=1e-4, atol=1e-4)
+    same = [set(np.asarray(i1)[r]) == set(np.asarray(i2)[r]) for r in range(500)]
+    assert np.mean(same) > 0.99
+
+
+def test_tsne_with_pallas_path_runs():
+    from repro.core.tsne import TsneConfig, run_tsne
+    rng = np.random.default_rng(11)
+    x = rng.normal(size=(256, 10)).astype(np.float32)
+    cfg = TsneConfig(perplexity=8.0, n_iter=30, exaggeration_iters=10,
+                     momentum_switch_iter=10, use_pallas=True, seed=3)
+    res = run_tsne(x, cfg, kl_every=30)
+    assert np.isfinite(res.y).all() and np.isfinite(res.kl)

@@ -1,0 +1,131 @@
+"""Per-architecture smoke tests: reduced configs, one loss/prefill/decode
+step on CPU, asserting shapes and finiteness (no NaNs)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_reduced_config
+from repro.models.model import build_model
+
+B, S = 2, 16
+
+
+def make_batch(cfg, key, kind="train"):
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_text = S - (cfg.vlm.n_patches if cfg.family == "vlm" else 0)
+    extra = 1 if kind == "train" else 0
+    batch = {"tokens": jax.random.randint(k1, (B, s_text + extra), 0, cfg.vocab_size)}
+    if cfg.family == "vlm":
+        batch["patches"] = jax.random.normal(k2, (B, cfg.vlm.n_patches, cfg.d_model), cfg.cdtype())
+    if cfg.family == "audio":
+        batch["frames"] = jax.random.normal(k3, (B, cfg.enc_dec.n_frames, cfg.d_model), cfg.cdtype())
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step_smoke(arch):
+    cfg = get_reduced_config(arch)
+    model = build_model(cfg)
+    key = jax.random.PRNGKey(0)
+    params = model.init(key)
+    batch = make_batch(cfg, jax.random.PRNGKey(1))
+
+    loss, metrics = jax.jit(model.loss_fn)(params, batch)
+    assert np.isfinite(float(loss)), f"{arch}: loss not finite"
+    assert float(loss) > 0
+    # one gradient step moves the loss and produces finite grads
+    grads, _ = jax.jit(jax.grad(model.loss_fn, has_aux=True))(params, batch)
+    leaves = jax.tree_util.tree_leaves(grads)
+    assert all(np.isfinite(np.asarray(g, np.float32)).all() for g in leaves), f"{arch}: NaN grads"
+    lr = 1e-2
+    new_params = jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype), params, grads)
+    loss2, _ = jax.jit(model.loss_fn)(new_params, batch)
+    assert np.isfinite(float(loss2))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_and_decode_smoke(arch):
+    cfg = get_reduced_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg, jax.random.PRNGKey(1), kind="prefill")
+    logits = jax.jit(model.prefill)(params, batch)
+    assert logits.shape == (B, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits, np.float32)).all(), f"{arch}: prefill NaNs"
+
+    cache = model.init_cache(B, S)
+    token = jnp.zeros((B,), jnp.int32)
+    pos = jnp.full((B,), 3, jnp.int32)
+    dlogits, new_cache = jax.jit(model.decode_step)(params, cache, token, pos)
+    assert dlogits.shape == (B, cfg.vocab_size)
+    assert np.isfinite(np.asarray(dlogits, np.float32)).all(), f"{arch}: decode NaNs"
+    # cache structure preserved
+    jax.tree.map(lambda a, b: None, cache, new_cache)
+
+
+@pytest.mark.parametrize("arch", ["deepseek_7b", "rwkv6_3b", "zamba2_2p7b", "deepseek_v2_lite_16b"])
+def test_decode_matches_prefill(arch):
+    """Greedy next-token from (prefill over S tokens) == (S decode steps)."""
+    # path equivalence is a math property — test it in f32 (bf16 noise through
+    # recurrent state otherwise dominates); for MoE, raise the capacity factor
+    # so neither path drops tokens (drop policy legitimately differs between
+    # a 1-token decode batch and a full prefill batch)
+    cfg = dataclasses.replace(get_reduced_config(arch), compute_dtype="float32")
+    if cfg.moe is not None:
+        cfg = dataclasses.replace(cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=64.0))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(7), (B, S), 0, cfg.vocab_size)
+    logits_prefill = jax.jit(model.prefill)(params, {"tokens": tokens})
+
+    cache = model.init_cache(B, S)
+    step = jax.jit(model.decode_step)
+    logits = None
+    for t in range(S):
+        logits, cache = step(params, cache, tokens[:, t], jnp.full((B,), t, jnp.int32))
+    np.testing.assert_allclose(
+        np.asarray(logits, np.float32), np.asarray(logits_prefill, np.float32),
+        rtol=1e-3, atol=1e-4,
+    )
+
+
+def test_wkv_chunked_matches_scan():
+    """Chunked-parallel WKV (hillclimb) == sequential recurrence, including
+    the carried state and non-multiple sequence lengths."""
+    from repro.models.rwkv import _wkv_chunked_parallel, _wkv_scan
+    rng = np.random.default_rng(0)
+    b, t, h, p = 2, 77, 3, 16
+    mk = lambda: jnp.asarray(rng.normal(size=(b, t, h, p)).astype(np.float32))
+    r, k, v = mk(), mk(), mk()
+    w = jnp.asarray(rng.uniform(0.05, 0.999, size=(b, t, h, p)).astype(np.float32))
+    u = jnp.asarray(rng.normal(size=(h, p)).astype(np.float32))
+    s0 = jnp.asarray(rng.normal(size=(b, h, p, p)).astype(np.float32))
+    o1, s1 = _wkv_scan(r, k, v, w, u, s0)
+    o2, s2 = _wkv_chunked_parallel(r, k, v, w, u, s0)
+    np.testing.assert_allclose(np.asarray(o2), np.asarray(o1), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(s1), rtol=1e-4, atol=1e-4)
+
+
+def test_param_count_sanity():
+    from repro.configs import all_configs, param_count
+    expected = {  # billions, loose bands from the public model cards
+        "llama3_405b": (380, 430),
+        "deepseek_v3_671b": (600, 720),
+        "deepseek_v2_lite_16b": (13, 19),
+        "deepseek_7b": (6, 8),
+        "minitron_8b": (7.5, 10),
+        "phi4_mini_3p8b": (3.2, 4.6),
+        "rwkv6_3b": (2.5, 3.8),
+        "zamba2_2p7b": (2.2, 3.4),
+        "llava_next_34b": (32, 37),
+        "whisper_tiny": (0.025, 0.055),
+    }
+    for name, cfg in all_configs().items():
+        total, active = param_count(cfg)
+        lo, hi = expected[name]
+        assert lo * 1e9 <= total <= hi * 1e9, f"{name}: {total/1e9:.2f}B outside [{lo},{hi}]"
+        if name != "zamba2_2p7b":  # zamba2 re-applies the shared block: active > total
+            assert active <= total
