@@ -1,20 +1,17 @@
 """Paper Fig. 4 + Table 4: end-to-end t-SNE across the six datasets.
 
-Compares the naive-baseline configuration (uncompressed daal4py-like tree +
-row-loop-free but unfused path) against the optimized Morton pipeline, and
-the exact O(N^2) method where feasible.  Dataset sizes are scaled by
-``--scale`` so the full suite fits a single-core CPU budget; pass
---scale 1.0 for paper-size runs.
+Runs everything through the public ``repro.api.TSNE`` estimator: the
+naive-baseline configuration (uncompressed daal4py-like tree) against the
+optimized Morton pipeline, the Pallas-kernel route, and the FIt-SNE-style
+FFT backend.  Dataset sizes are scaled by ``--scale`` so the full suite
+fits a single-core CPU budget; pass --scale 1.0 for paper-size runs.
 """
 from __future__ import annotations
 
-import dataclasses
 import time
 
-import numpy as np
-
 from benchmarks.common import emit
-from repro.core.tsne import TsneConfig, run_tsne
+from repro.api import TSNE
 from repro.data.datasets import SPECS, make_dataset
 
 BENCH_SETS = ["digits", "mnist", "fashion_mnist", "cifar10", "svhn", "mouse_1p3m"]
@@ -28,20 +25,27 @@ def run(n_iter: int = 250, scale: float = 1.0, perplexity: float = 30.0):
         x, _ = make_dataset(name, n=n)
         if x.shape[1] > 50:      # paper applies t-SNE post-PCA for mouse only;
             x = x[:, :50]        # we cap input dim so KNN cost stays CPU-sane
-        base = TsneConfig(perplexity=perplexity, n_iter=n_iter,
-                          exaggeration_iters=min(250, n_iter // 2),
-                          momentum_switch_iter=min(250, n_iter // 2), seed=0)
+        swap = min(250, n_iter // 2)
+
+        def make(method="barnes_hut", **backend_opts):
+            return TSNE(method=method, perplexity=perplexity, n_iter=n_iter,
+                        random_state=0, kl_every=n_iter,
+                        backend_options=dict(exaggeration_iters=swap,
+                                             momentum_switch_iter=swap,
+                                             **backend_opts))
+
         variants = {
-            "naive_bh": dataclasses.replace(base, compress_tree=False),
-            "acc_tsne": base,
-            "acc_tsne_pallas": dataclasses.replace(base, use_pallas=True),
+            "naive_bh": make(compress_tree=False),
+            "acc_tsne": make(),
+            "acc_tsne_pallas": make(use_pallas=True),
+            "fft": make(method="fft"),
         }
         times, kls = {}, {}
-        for vname, cfg in variants.items():
+        for vname, est in variants.items():
             t0 = time.perf_counter()
-            res = run_tsne(x, cfg, kl_every=n_iter)
+            est.fit(x)
             times[vname] = time.perf_counter() - t0
-            kls[vname] = res.kl
+            kls[vname] = est.kl_divergence_
         sp = times["naive_bh"] / times["acc_tsne"]
         for vname in variants:
             emit(f"e2e_{name}_n{n}_{vname}", times[vname] * 1e6,

@@ -15,6 +15,7 @@ import time
 
 import numpy as np
 
+from repro.api import make_backend
 from repro.core.tsne import TsneConfig, init_state, preprocess, tsne_step
 from repro.data.datasets import make_dataset
 
@@ -37,7 +38,7 @@ def main():
     cfg = TsneConfig(perplexity=args.perplexity, theta=args.theta, n_iter=args.iters)
 
     t0 = time.perf_counter()
-    operands, p_logp, timings = preprocess(jnp.asarray(x), cfg)
+    graph, timings = preprocess(jnp.asarray(x), cfg)
     print(f"KNN {timings['knn']:.1f}s  BSP {timings['bsp']:.1f}s  "
           f"symmetrize {timings['symmetrize']:.1f}s")
 
@@ -52,19 +53,18 @@ def main():
             print(f"resumed from iteration {start}")
 
     lr = cfg.resolve_lr(args.n)
-    e = (jnp.zeros((1,), jnp.int32),) * 2 + (jnp.zeros((1,), jnp.float32),)
-    kw = dict(theta=cfg.theta, depth=cfg.depth, lr=lr, min_gain=cfg.min_gain,
-              compress_tree=True, use_pallas=False, has_edges=False)
+    backend = make_backend(cfg.method, cfg, args.n)
     t_gd = time.perf_counter()
     for it in range(start, args.iters):
         exag = cfg.early_exaggeration if it < cfg.exaggeration_iters else 1.0
         mom = cfg.momentum_initial if it < cfg.momentum_switch_iter else cfg.momentum_final
-        state, kl, trav = tsne_step(
-            state, operands["p_cols"], operands["p_vals"], *e,
-            jnp.asarray(exag, jnp.float32), jnp.asarray(mom, jnp.float32), p_logp, **kw)
+        state, stats = tsne_step(
+            state, graph, jnp.asarray(exag, jnp.float32),
+            jnp.asarray(mom, jnp.float32),
+            backend=backend, lr=lr, min_gain=cfg.min_gain)
         if (it + 1) % 50 == 0:
-            print(f"iter {it+1:5d}  KL {float(kl):.4f}  "
-                  f"max_traversal {int(trav)}  "
+            print(f"iter {it+1:5d}  KL {float(stats.kl):.4f}  "
+                  f"max_traversal {int(stats.max_traversal)}  "
                   f"{(time.perf_counter()-t_gd)/(it+1-start)*1000:.0f} ms/iter")
         if ckpt is not None and (it + 1) % args.ckpt_every == 0:
             ckpt.save(it + 1, state)

@@ -1,15 +1,16 @@
-"""Quickstart: Barnes-Hut t-SNE on the digits-size dataset.
+"""Quickstart: t-SNE through the sklearn-compatible estimator API.
 
     PYTHONPATH=src python examples/quickstart.py [--n 1797] [--iters 500]
+        [--method exact|barnes_hut|fft]
 
 Produces embedding.npy + prints the KL trajectory — the 30-second tour of
-the public API (TsneConfig / run_tsne).
+the public API (repro.api.TSNE with a pluggable gradient backend).
 """
 import argparse
 
 import numpy as np
 
-from repro.core.tsne import TsneConfig, run_tsne
+from repro.api import TSNE
 from repro.data.datasets import make_dataset
 
 
@@ -19,19 +20,24 @@ def main():
     ap.add_argument("--iters", type=int, default=500)
     ap.add_argument("--perplexity", type=float, default=30.0)
     ap.add_argument("--theta", type=float, default=0.5)
+    ap.add_argument("--method", default="barnes_hut")
     ap.add_argument("--out", default="embedding.npy")
     args = ap.parse_args()
 
     x, labels = make_dataset("digits", n=args.n)
-    cfg = TsneConfig(perplexity=args.perplexity, theta=args.theta,
-                     n_iter=args.iters)
-    res = run_tsne(x, cfg, callback=lambda it, kl: print(f"iter {it:5d}  KL {kl:.4f}"))
-    np.save(args.out, res.y)
-    print(f"\ntimings: {res.timings}")
-    print(f"final KL = {res.kl:.4f}; embedding -> {args.out}")
+    est = TSNE(
+        method=args.method, perplexity=args.perplexity, angle=args.theta,
+        n_iter=args.iters, random_state=0,
+        callbacks=[lambda s: print(
+            f"iter {s.iteration:5d}  KL {s.kl:.4f}  |grad| {s.grad_norm:.2e}")],
+    )
+    y = est.fit_transform(x)
+    np.save(args.out, y)
+    print(f"\ntimings: {est.timings_}")
+    print(f"final KL = {est.kl_divergence_:.4f} after {est.n_iter_} iters; "
+          f"embedding -> {args.out}")
 
     # quick quality readout: mean intra/inter cluster distance ratio
-    y = res.y
     cents = np.stack([y[labels == c].mean(0) for c in np.unique(labels)])
     intra = np.mean([np.linalg.norm(y[labels == c] - cents[i], axis=1).mean()
                      for i, c in enumerate(np.unique(labels))])

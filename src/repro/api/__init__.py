@@ -1,0 +1,26 @@
+"""Public t-SNE surface: sklearn-compatible estimator + backend registry.
+
+    from repro.api import TSNE
+    emb = TSNE(method="barnes_hut", perplexity=30).fit_transform(x)
+
+Backends ("exact" | "barnes_hut" | "fft", or your own via
+:func:`register_backend`) plug in behind the stable estimator front end.
+"""
+from repro.core.tsne import (
+    GradResult, IterationStats, NeighborGraph, ObserverFn, TsneConfig,
+    TsneResult, preprocess, run_tsne,
+)
+from repro.api.backends import (
+    BarnesHutBackend, ExactBackend, FFTBackend, GradientBackend,
+    available_backends, make_backend, register_backend, unregister_backend,
+)
+from repro.api.estimator import TSNE
+
+__all__ = [
+    "TSNE",
+    "GradientBackend", "ExactBackend", "BarnesHutBackend", "FFTBackend",
+    "register_backend", "unregister_backend", "available_backends",
+    "make_backend",
+    "GradResult", "IterationStats", "NeighborGraph", "ObserverFn",
+    "TsneConfig", "TsneResult", "preprocess", "run_tsne",
+]

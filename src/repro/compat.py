@@ -1,0 +1,26 @@
+"""Cross-version JAX shims.
+
+``shard_map`` moved from ``jax.experimental.shard_map`` to the ``jax``
+namespace, and its replication-check kwarg was renamed ``check_rep`` ->
+``check_vma`` along the way.  Every shard_map call site in this repo goes
+through this wrapper so the rest of the code can use the modern spelling
+regardless of the pinned jax version.
+"""
+from __future__ import annotations
+
+import inspect
+
+try:  # jax >= 0.6: public API
+    from jax import shard_map as _shard_map
+except ImportError:  # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_CHECK_KW = (
+    "check_vma" if "check_vma" in inspect.signature(_shard_map).parameters
+    else "check_rep"
+)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+    kw = {_CHECK_KW: check_vma}
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)

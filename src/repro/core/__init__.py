@@ -6,7 +6,11 @@ from repro.core.repulsive import bh_repulsion_sorted, RepulsionResult
 from repro.core.attractive import attractive_forces_ell, attractive_forces_edges
 from repro.core.bsp import binary_search_perplexity, perplexity_of
 from repro.core.knn import knn
-from repro.core.tsne import TsneConfig, TsneResult, run_tsne, bh_gradient, tsne_step, preprocess, init_state
+from repro.core.tsne import (
+    DEFAULT_ATTRACTIVE_IMPL, GradResult, IterationStats, NeighborGraph,
+    TsneConfig, TsneResult, bh_gradient, init_state, preprocess, run_tsne,
+    tsne_step,
+)
 
 __all__ = [
     "morton_encode", "span_radius", "DEFAULT_DEPTH",
@@ -16,6 +20,7 @@ __all__ = [
     "attractive_forces_ell", "attractive_forces_edges",
     "binary_search_perplexity", "perplexity_of",
     "knn",
+    "DEFAULT_ATTRACTIVE_IMPL", "GradResult", "IterationStats", "NeighborGraph",
     "TsneConfig", "TsneResult", "run_tsne", "bh_gradient", "tsne_step",
     "preprocess", "init_state",
 ]

@@ -103,6 +103,26 @@ def attractive_forces_ell_blocked(y: jax.Array, cols: jax.Array, vals: jax.Array
     return force, jnp.sum(kl)
 
 
+# Single dispatch table for the ELL-layout variants — shared by bh_gradient
+# and the api backends so a new implementation is registered exactly once.
+ELL_IMPLS = {
+    "ell": attractive_forces_ell,
+    "components": attractive_forces_ell_components,
+    "blocked": attractive_forces_ell_blocked,
+}
+
+
+def ell_impl(name: str):
+    """Look up an ELL attractive kernel by name ('edges' is not an ELL impl)."""
+    try:
+        return ELL_IMPLS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown attractive_impl {name!r}; ELL variants: "
+            f"{', '.join(sorted(ELL_IMPLS))} (or 'edges' with an edge list)"
+        ) from None
+
+
 def attractive_forces_edges(y: jax.Array, src: jax.Array, dst: jax.Array, w: jax.Array):
     """Symmetric attractive force from the directed edge list.
 

@@ -1,10 +1,15 @@
 """End-to-end Barnes-Hut t-SNE driver (paper Fig. 1a pipeline).
 
 Pipeline:  KNN -> BSP -> symmetrize P -> gradient descent where every
-iteration rebuilds the Morton quadtree, summarizes it, and evaluates the
-attractive (sparse) + repulsive (Barnes-Hut) forces, with early exaggeration,
-momentum switching and per-dimension gains exactly as in the reference
-implementations the paper benchmarks against (scikit-learn / daal4py).
+iteration evaluates the attractive (sparse) + repulsive forces through a
+pluggable :class:`~repro.api.backends.GradientBackend` (Barnes-Hut by
+default), with early exaggeration, momentum switching and per-dimension
+gains exactly as in the reference implementations the paper benchmarks
+against (scikit-learn / daal4py).
+
+The preprocessing product is a typed :class:`NeighborGraph` (a JAX pytree),
+so the whole descent step — backend gradient + momentum/gains update — jits
+as one program regardless of which backend is plugged in.
 """
 from __future__ import annotations
 
@@ -22,6 +27,11 @@ from repro.core.knn import knn as _knn
 from repro.core.summarize import summarize as _summarize
 from repro.core.repulsive import bh_repulsion_sorted
 
+# Single source of truth for the attractive-kernel variant ('blocked' is the
+# cache-blocked Alg. 2 — the measured §Perf winner).  TsneConfig, bh_gradient
+# and the barnes_hut backend all default to this constant.
+DEFAULT_ATTRACTIVE_IMPL = "blocked"
+
 
 @dataclasses.dataclass(frozen=True)
 class TsneConfig:
@@ -35,6 +45,7 @@ class TsneConfig:
     momentum_final: float = 0.8
     momentum_switch_iter: int = 250
     min_gain: float = 0.01
+    min_grad_norm: float = 1e-7           # early stop when ||grad|| drops below
     init_std: float = 1e-4
     depth: int | str = morton.DEFAULT_DEPTH   # "auto" = morton.auto_depth(N)
     seed: int = 0
@@ -44,8 +55,10 @@ class TsneConfig:
     use_pallas: bool = False              # route hot loops through Pallas kernels
     # 'blocked' (cache-blocked Alg.2 — default, §Perf winner) | 'ell'
     # (plain vectorized) | 'components' (SoA planes) | 'edges' (scatter)
-    attractive_impl: str = "blocked"
+    attractive_impl: str = DEFAULT_ATTRACTIVE_IMPL
     compress_tree: bool = True            # False = daal4py-like uncompressed tree
+    method: str = "barnes_hut"            # registered gradient backend name
+    fft_n_boxes: int = 48                 # grid boxes/dim for the 'fft' backend
 
     def resolve_lr(self, n: int) -> float:
         if self.learning_rate == "auto":
@@ -54,6 +67,9 @@ class TsneConfig:
 
     def n_neighbors(self) -> int:
         return int(3.0 * self.perplexity)
+
+    def resolve_depth(self, n: int) -> int:
+        return morton.auto_depth(n) if self.depth == "auto" else int(self.depth)
 
 
 class TsneState(NamedTuple):
@@ -64,10 +80,52 @@ class TsneState(NamedTuple):
 
 
 class GradResult(NamedTuple):
+    """Common product of every gradient backend (exact / barnes_hut / fft)."""
     grad: jax.Array
-    kl: jax.Array          # KL(P||Q) estimate (exact attractive part, BH Z)
+    kl: jax.Array          # KL(P||Q) estimate (exact attractive part, backend Z)
     z: jax.Array
-    max_traversal: jax.Array
+    max_traversal: jax.Array  # BH tree-walk depth; 0 for tree-free backends
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class NeighborGraph:
+    """Sparse symmetric input-similarity graph produced by :func:`preprocess`.
+
+    A JAX pytree: flows straight through ``jax.jit`` as one operand, so any
+    backend can pick whichever layout it needs (ELL rows or the directed edge
+    list) inside a jitted step.
+    """
+    p_cols: jax.Array       # [N, W] int32 ELL neighbor indices (pad: row idx)
+    p_vals: jax.Array       # [N, W] symmetric p_ij, sums to 1 (pad: 0)
+    edge_src: jax.Array     # [NK] directed KNN edges ([1] dummy when unused)
+    edge_dst: jax.Array
+    edge_w: jax.Array       # p_{dst|src} / 2N
+    p_logp: jax.Array       # exact sum_ij p_ij log p_ij (KL constant)
+    n: int = dataclasses.field(metadata=dict(static=True), default=0)
+    has_edges: bool = dataclasses.field(metadata=dict(static=True), default=False)
+
+    @property
+    def edges(self) -> tuple[jax.Array, jax.Array, jax.Array] | None:
+        return (self.edge_src, self.edge_dst, self.edge_w) if self.has_edges else None
+
+
+def combine_forces(
+    f_attr, kl_attr, f_rep_unnorm, z, exaggeration, p_logp,
+    max_traversal=None,
+) -> GradResult:
+    """Shared backend epilogue (eq. 6/7): fold attractive + repulsive terms.
+
+    grad = 4 (exag * F_attr - F_rep / Z);  KL = sum p log p + kl_attr + log Z.
+    ``f_rep_unnorm`` is the un-normalized repulsive numerator.
+    """
+    dtype = f_attr.dtype
+    z = jnp.maximum(z, 1e-30)
+    grad = 4.0 * (jnp.asarray(exaggeration, dtype) * f_attr - f_rep_unnorm / z)
+    kl = p_logp + kl_attr + jnp.log(z)
+    if max_traversal is None:
+        max_traversal = jnp.zeros((), jnp.int32)
+    return GradResult(grad=grad, kl=kl, z=z, max_traversal=max_traversal)
 
 
 # ---------------------------------------------------------------------------
@@ -85,9 +143,8 @@ def bh_gradient(
     p_logp: jax.Array | float,
     compress_tree: bool = True,
     use_pallas: bool = False,
-    attractive_impl: str = "ell",
+    attractive_impl: str = DEFAULT_ATTRACTIVE_IMPL,
 ) -> GradResult:
-    dtype = y.dtype
     # --- quadtree building (step 3) ---
     cent, r_span = morton.span_radius(y)
     if use_pallas:
@@ -101,24 +158,19 @@ def bh_gradient(
     summ = _summarize(tree, y_s, r_span)
     # --- repulsive (step 6) ---
     rep = bh_repulsion_sorted(y_s, tree, summ, theta)
-    z = jnp.maximum(jnp.sum(rep.z_per_point), 1e-30)
-    f_rep = jnp.zeros_like(y).at[perm].set(rep.force) / z
+    z = jnp.sum(rep.z_per_point)
+    f_rep = jnp.zeros_like(y).at[perm].set(rep.force)
     # --- attractive (step 5) ---
     if edges is not None:
         f_attr, kl_attr = attractive.attractive_forces_edges(y, *edges)
     else:
         if use_pallas:
             from repro.kernels.ops import attractive_forces_ell as attr_ell
-        elif attractive_impl == "components":
-            attr_ell = attractive.attractive_forces_ell_components
-        elif attractive_impl == "blocked":
-            attr_ell = attractive.attractive_forces_ell_blocked
         else:
-            attr_ell = attractive.attractive_forces_ell
+            attr_ell = attractive.ell_impl(attractive_impl)
         f_attr, kl_attr = attr_ell(y, p_cols, p_vals)
-    grad = 4.0 * (jnp.asarray(exaggeration, dtype) * f_attr - f_rep)
-    kl = p_logp + kl_attr + jnp.log(z)
-    return GradResult(grad=grad, kl=kl, z=z, max_traversal=jnp.max(rep.steps))
+    return combine_forces(f_attr, kl_attr, f_rep, z, exaggeration, p_logp,
+                          max_traversal=jnp.max(rep.steps))
 
 
 # ---------------------------------------------------------------------------
@@ -135,39 +187,37 @@ def gd_update(state: TsneState, grad: jax.Array, lr: float, momentum, min_gain: 
     return TsneState(y=y, velocity=velocity, gains=gains, iteration=state.iteration + 1)
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("theta", "depth", "lr", "min_gain", "compress_tree",
-                     "use_pallas", "has_edges", "attractive_impl"),
-)
+class StepStats(NamedTuple):
+    """Device-side per-iteration diagnostics returned by :func:`tsne_step`."""
+    kl: jax.Array
+    grad_norm: jax.Array
+    z: jax.Array
+    max_traversal: jax.Array
+
+
+@functools.partial(jax.jit, static_argnames=("backend", "lr", "min_gain"))
 def tsne_step(
     state: TsneState,
-    p_cols,
-    p_vals,
-    edge_src,
-    edge_dst,
-    edge_w,
+    graph: NeighborGraph,
     exaggeration,
     momentum,
-    p_logp,
     *,
-    theta: float,
-    depth: int,
+    backend,
     lr: float,
     min_gain: float,
-    compress_tree: bool,
-    use_pallas: bool,
-    has_edges: bool,
-    attractive_impl: str = "ell",
 ):
-    edges = (edge_src, edge_dst, edge_w) if has_edges else None
-    res = bh_gradient(
-        state.y, p_cols, p_vals, edges, theta, exaggeration, depth, p_logp,
-        compress_tree=compress_tree, use_pallas=use_pallas,
-        attractive_impl=attractive_impl,
-    )
+    """One descent iteration: backend gradient + momentum/gains update.
+
+    ``backend`` is any hashable object with a
+    ``gradient(y, graph, exaggeration) -> GradResult`` method (see
+    ``repro.api.backends``); it is a static argument, so each backend
+    compiles its own step program once.
+    """
+    res = backend.gradient(state.y, graph, exaggeration)
+    grad_norm = jnp.linalg.norm(res.grad)
     new_state = gd_update(state, res.grad, lr, momentum, min_gain)
-    return new_state, res.kl, res.max_traversal
+    return new_state, StepStats(kl=res.kl, grad_norm=grad_norm, z=res.z,
+                                max_traversal=res.max_traversal)
 
 
 # ---------------------------------------------------------------------------
@@ -179,10 +229,27 @@ class TsneResult(NamedTuple):
     kl: float
     kl_history: np.ndarray
     timings: dict
+    n_iter: int = 0
 
 
-def preprocess(x: jax.Array, config: TsneConfig):
-    """KNN + BSP + symmetrization; returns the sparse-P operands."""
+@dataclasses.dataclass(frozen=True)
+class IterationStats:
+    """Structured observer payload (replaces the bare ``(it, kl)`` callback)."""
+    iteration: int          # 1-based iteration just completed
+    kl: float               # KL(P||Q) estimate at this iteration
+    grad_norm: float        # ||dC/dY||_F — drives min_grad_norm early stopping
+    z: float                # repulsive normalizer estimate
+    max_traversal: int      # deepest BH tree walk (0 for exact / fft backends)
+    exaggeration: float
+    momentum: float
+    elapsed_s: float        # wall time since gradient descent started
+
+
+ObserverFn = Callable[[IterationStats], None]
+
+
+def preprocess(x: jax.Array, config: TsneConfig) -> tuple[NeighborGraph, dict]:
+    """KNN + BSP + symmetrization -> (NeighborGraph, stage timings)."""
     k = config.n_neighbors()
     t0 = time.perf_counter()
     idx, d2 = _knn(
@@ -199,24 +266,44 @@ def preprocess(x: jax.Array, config: TsneConfig):
     t_bsp = time.perf_counter() - t0
 
     t0 = time.perf_counter()
+    n = int(x.shape[0])
     if config.attractive_impl == "edges":
+        # edge layout: ship only the directed edge list ([N, W] ELL planes
+        # would ride along as dead jit operands of every step).  The exact
+        # KL constant comes from an ordered-pair dedup: mutual KNN edges sum
+        # to the symmetric p_ij = (p_{j|i} + p_{i|j}) / 2N.
         src, dst, w = similarity.edge_list(idx, cond_p)
-        operands = dict(edges=(src, dst, w), p_cols=None, p_vals=None)
-        total_p = 2.0 * jnp.sum(w)
-        w_sym = jnp.concatenate([w, w]) / total_p * 2.0  # ordered-pair weights
-        p_logp = jnp.sum(jnp.where(w > 0, 2 * (w / total_p) * jnp.log(jnp.maximum(w / total_p, 1e-30)), 0.0))
-        # note: edge-list p_logp is approximate when mutual edges overlap; the
-        # exact Sum p log p only shifts KL by a constant — forces unaffected.
+        s = np.asarray(src, np.int64)
+        d = np.asarray(dst, np.int64)
+        wv = np.asarray(w, np.float64)
+        key = np.concatenate([s * n + d, d * n + s])
+        val = np.concatenate([wv, wv])
+        _, inv = np.unique(key, return_inverse=True)
+        p = np.bincount(inv, weights=val)
+        p = p / p.sum()
+        p_logp = float((p[p > 0] * np.log(p[p > 0])).sum())
+        has_edges = True
+        p_cols = jnp.zeros((1, 1), jnp.int32)
+        p_vals = jnp.zeros((1, 1), config.dtype)
     else:
         sym_cols, sym_vals = similarity.symmetrize_ell(idx, cond_p)
         sym_vals = sym_vals / sym_vals.sum()
-        p_cols = jnp.asarray(sym_cols)
-        p_vals = jnp.asarray(sym_vals, config.dtype)
-        operands = dict(edges=None, p_cols=p_cols, p_vals=p_vals)
         pv = np.asarray(sym_vals)
         p_logp = float((pv[pv > 0] * np.log(pv[pv > 0])).sum())
+        src = dst = jnp.zeros((1,), jnp.int32)
+        w = jnp.zeros((1,), config.dtype)
+        has_edges = False
+        p_cols = jnp.asarray(sym_cols)
+        p_vals = jnp.asarray(sym_vals, config.dtype)
+    graph = NeighborGraph(
+        p_cols=p_cols, p_vals=p_vals,
+        edge_src=src, edge_dst=dst, edge_w=w,
+        p_logp=jnp.asarray(p_logp, config.dtype),
+        n=n,
+        has_edges=has_edges,
+    )
     t_sym = time.perf_counter() - t0
-    return operands, jnp.asarray(p_logp, config.dtype), dict(knn=t_knn, bsp=t_bsp, symmetrize=t_sym)
+    return graph, dict(knn=t_knn, bsp=t_bsp, symmetrize=t_sym)
 
 
 def init_state(n: int, config: TsneConfig) -> TsneState:
@@ -233,44 +320,60 @@ def init_state(n: int, config: TsneConfig) -> TsneState:
 def run_tsne(
     x,
     config: TsneConfig = TsneConfig(),
-    callback: Callable[[int, float], None] | None = None,
+    observer: ObserverFn | None = None,
     kl_every: int = 50,
+    backend=None,
 ) -> TsneResult:
+    """Full t-SNE run through a pluggable gradient backend.
+
+    ``backend`` defaults to the registered backend named ``config.method``;
+    pass any ``GradientBackend`` instance to override.  ``observer`` is
+    called with :class:`IterationStats` every ``kl_every`` iterations (and on
+    the final one); ``config.min_grad_norm`` stops the descent early at those
+    same checkpoints, matching scikit-learn's convergence rule.
+    """
     x = jnp.asarray(x, config.dtype)
     n = x.shape[0]
     lr = config.resolve_lr(n)
-    operands, p_logp, timings = preprocess(x, config)
+    graph, timings = preprocess(x, config)
     state = init_state(n, config)
 
-    has_edges = operands["edges"] is not None
-    e = operands["edges"] or (jnp.zeros((1,), jnp.int32),) * 2 + (jnp.zeros((1,), config.dtype),)
-    depth = morton.auto_depth(n) if config.depth == "auto" else config.depth
-    step_kw = dict(
-        theta=config.theta, depth=depth, lr=lr, min_gain=config.min_gain,
-        compress_tree=config.compress_tree, use_pallas=config.use_pallas,
-        has_edges=has_edges, attractive_impl=config.attractive_impl,
-    )
+    if backend is None:
+        from repro.api.backends import make_backend  # lazy: api builds on core
+        backend = make_backend(config.method, config, n)
+    step_kw = dict(backend=backend, lr=lr, min_gain=config.min_gain)
+
     kl_hist = []
     t0 = time.perf_counter()
-    kl = jnp.asarray(jnp.nan)
+    kl = float("nan")
+    it = 0
     for it in range(config.n_iter):
         exag = config.early_exaggeration if it < config.exaggeration_iters else 1.0
         mom = config.momentum_initial if it < config.momentum_switch_iter else config.momentum_final
-        state, kl, _ = tsne_step(
-            state, operands["p_cols"], operands["p_vals"], e[0], e[1], e[2],
-            jnp.asarray(exag, config.dtype), jnp.asarray(mom, config.dtype), p_logp,
+        state, stats = tsne_step(
+            state, graph,
+            jnp.asarray(exag, config.dtype), jnp.asarray(mom, config.dtype),
             **step_kw,
         )
         if (it + 1) % kl_every == 0 or it == config.n_iter - 1:
-            kl_val = float(kl)
-            kl_hist.append((it + 1, kl_val))
-            if callback is not None:
-                callback(it + 1, kl_val)
+            kl = float(stats.kl)
+            grad_norm = float(stats.grad_norm)
+            kl_hist.append((it + 1, kl))
+            if observer is not None:
+                observer(IterationStats(
+                    iteration=it + 1, kl=kl, grad_norm=grad_norm,
+                    z=float(stats.z), max_traversal=int(stats.max_traversal),
+                    exaggeration=exag, momentum=mom,
+                    elapsed_s=time.perf_counter() - t0,
+                ))
+            if grad_norm < config.min_grad_norm:
+                break
     state.y.block_until_ready()
     timings["gradient_descent"] = time.perf_counter() - t0
     return TsneResult(
         y=np.asarray(state.y),
-        kl=float(kl),
+        kl=kl,
         kl_history=np.asarray(kl_hist, np.float64) if kl_hist else np.zeros((0, 2)),
         timings=timings,
+        n_iter=it + 1,
     )

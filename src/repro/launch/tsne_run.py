@@ -1,6 +1,7 @@
-"""t-SNE launcher — single-device or sharded (distributed step) runs.
+"""t-SNE launcher — single-device (estimator API) or sharded runs.
 
     PYTHONPATH=src python -m repro.launch.tsne_run --dataset digits --n 1797
+    PYTHONPATH=src python -m repro.launch.tsne_run --method fft --n 4096
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
       PYTHONPATH=src python -m repro.launch.tsne_run --dataset mnist --n 4096 --devices 8
 """
@@ -16,6 +17,8 @@ def main():
     ap.add_argument("--iters", type=int, default=500)
     ap.add_argument("--perplexity", type=float, default=30.0)
     ap.add_argument("--theta", type=float, default=0.5)
+    ap.add_argument("--method", default="barnes_hut",
+                    help="gradient backend: exact | barnes_hut | fft | any registered name")
     ap.add_argument("--devices", type=int, default=1,
                     help=">1: shard points over a data mesh (distributed step)")
     ap.add_argument("--out", default="tsne_out.npy")
@@ -24,19 +27,22 @@ def main():
     import jax
     import jax.numpy as jnp
     import numpy as np
+    from repro.api import TSNE
     from repro.core import bsp
     from repro.core.knn import knn
     from repro.core.similarity import symmetrize_ell
-    from repro.core.tsne import TsneConfig, init_state, run_tsne, gd_update
+    from repro.core.tsne import TsneConfig, init_state, gd_update
     from repro.data.datasets import make_dataset
 
     x, _ = make_dataset(args.dataset, n=args.n)
     cfg = TsneConfig(perplexity=args.perplexity, theta=args.theta, n_iter=args.iters)
 
     if args.devices <= 1:
-        res = run_tsne(x, cfg, callback=lambda it, kl: print(f"iter {it} KL {kl:.4f}"))
-        np.save(args.out, res.y)
-        print(f"KL={res.kl:.4f} -> {args.out}")
+        est = TSNE(method=args.method, perplexity=args.perplexity,
+                   angle=args.theta, n_iter=args.iters, verbose=1)
+        emb = est.fit_transform(x)
+        np.save(args.out, emb)
+        print(f"KL={est.kl_divergence_:.4f} n_iter={est.n_iter_} -> {args.out}")
         return
 
     # distributed path: points sharded over a 1-D data mesh

@@ -69,11 +69,12 @@ def test_compressed_psum_accuracy():
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
         from repro.distributed.compression import compressed_psum
+        from repro.compat import shard_map
         mesh = jax.make_mesh((8,), ("data",))
         rng = np.random.default_rng(0)
         x = jnp.asarray(rng.normal(size=(8, 128)).astype(np.float32))
         exact = np.asarray(x).sum(0)
-        got = jax.shard_map(lambda v: compressed_psum(v[0], "data"),
+        got = shard_map(lambda v: compressed_psum(v[0], "data"),
                             mesh=mesh, in_specs=P("data"), out_specs=P(None),
                             check_vma=False)(x)
         scale = np.abs(x).max() / 127.0
