@@ -1,0 +1,85 @@
+"""Neighbor-backend benchmark: recall@k + throughput vs the exact oracle.
+
+    PYTHONPATH=src python benchmarks/bench_knn.py                # full sweep
+    PYTHONPATH=src python benchmarks/bench_knn.py --smoke        # CI-sized
+
+Every registered production backend runs against the exact blocked brute
+force on mouse-like data (20-D, 30 planted clusters) across dataset scales
+— by default up to 50k points, where the O(N²·D) exact scan is measurably
+slower than the approximate backends and the gap keeps widening with N.
+Emits ``name,us_per_call,derived`` rows; ``derived`` carries recall@k and
+the speedup over exact.
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+if __package__ in (None, ""):                # `python benchmarks/bench_knn.py`
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+
+from benchmarks.common import emit
+from repro.data.datasets import make_dataset
+from repro.neighbors import (
+    available_neighbor_backends, make_neighbor_backend, recall_at_k,
+)
+
+
+def _timed(backend, x, k, iters: int) -> tuple[float, np.ndarray]:
+    """Median warm wall-seconds and the neighbor indices."""
+    idx, d2 = backend.neighbors(x, k)          # warmup (compile)
+    jax.block_until_ready(idx)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        idx, d2 = backend.neighbors(x, k)
+        jax.block_until_ready(idx)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times)), np.asarray(idx)
+
+
+def run(sizes=(2000, 10000, 50000), k: int = 30, variants=None):
+    if variants is None:   # every registered backend, at default settings
+        variants = {name: {} for name in available_neighbor_backends()
+                    if name != "exact"}
+    for n in sizes:
+        x, _ = make_dataset("mouse_1p3m", n=n)
+        x = jnp.asarray(x)
+        iters = 1 if n >= 20000 else 3
+        t_exact, ref_idx = _timed(make_neighbor_backend("exact"), x, k, iters)
+        emit(f"knn_n{n}_exact", t_exact * 1e6, "recall=1.000")
+        for name, opts in variants.items():
+            t, idx = _timed(make_neighbor_backend(name, opts), x, k, iters)
+            rec = recall_at_k(ref_idx, idx)
+            emit(f"knn_n{n}_{name}", t * 1e6,
+                 f"recall={rec:.3f} speedup_vs_exact={t_exact / t:.2f}x")
+            assert rec > 0.3, f"{name} recall collapsed ({rec:.3f}) at n={n}"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale CI run (small n, shrunk backends)")
+    ap.add_argument("--sizes", default="2000,10000,50000")
+    ap.add_argument("--k", type=int, default=30)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    if args.smoke:
+        run(sizes=(1500,), k=15, variants={
+            "rp_forest": {"n_trees": 4, "refine_iters": 1},
+            "nn_descent": {"n_iters": 4},
+        })
+    else:
+        run(sizes=tuple(int(s) for s in args.sizes.split(",")), k=args.k)
+    print(f"# total_bench_wall_s,{time.time() - t0:.1f},", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -17,7 +17,7 @@ import time
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--bench", default="steps,accuracy,scaling,e2e")
+    ap.add_argument("--bench", default="steps,accuracy,scaling,e2e,knn")
     ap.add_argument("--quick", action="store_true", help="small sizes (CI)")
     ap.add_argument("--n", type=int, default=None, help="points for step bench")
     ap.add_argument("--scale", type=float, default=None, help="e2e dataset scale")
@@ -41,6 +41,10 @@ def main() -> None:
         from benchmarks import bench_e2e
         bench_e2e.run(n_iter=60 if args.quick else 250,
                       scale=args.scale or (0.15 if args.quick else 1.0))
+    if "knn" in benches:
+        from benchmarks import bench_knn
+        bench_knn.run(sizes=(2000, 5000) if args.quick else (2000, 10000, 50000),
+                      k=15 if args.quick else 30)
 
     print(f"# total_bench_wall_s,{time.time() - t0:.1f},", file=sys.stderr)
 

@@ -7,7 +7,10 @@ This is the paper's kind of workload end-to-end: KNN -> BSP -> symmetrize ->
 1000 gradient-descent iterations with per-stage timings (paper Fig. 1b /
 Table 5).  --n scales the subsample (the paper also benchmarks a 1M-cell
 subsample); the full 1291337 points run with --n 1291337 given time.
-Checkpointing (--ckpt_dir) makes multi-hour full-size runs restartable.
+The KNN stage defaults to the ``rp_forest`` approximate backend — at this
+dataset's scale the exact O(N²·D) scan dominates end-to-end time (pass
+--neighbor_method exact to get it back).  Checkpointing (--ckpt_dir) makes
+multi-hour full-size runs restartable.
 """
 import argparse
 import pathlib
@@ -28,6 +31,10 @@ def main():
     ap.add_argument("--iters", type=int, default=1000)
     ap.add_argument("--perplexity", type=float, default=30.0)
     ap.add_argument("--theta", type=float, default=0.5)
+    ap.add_argument("--neighbor_method", default="rp_forest",
+                    help="exact | rp_forest | nn_descent | any registered name")
+    ap.add_argument("--n_neighbors", type=int, default=None,
+                    help="KNN degree (default: 3 * perplexity)")
     ap.add_argument("--ckpt_dir", default="")
     ap.add_argument("--ckpt_every", type=int, default=200)
     ap.add_argument("--out", default="mouse_embedding.npy")
@@ -35,11 +42,14 @@ def main():
 
     print(f"generating mouse-like dataset: {args.n} cells x 20 components")
     x, _ = make_dataset("mouse_1p3m", n=args.n)
-    cfg = TsneConfig(perplexity=args.perplexity, theta=args.theta, n_iter=args.iters)
+    cfg = TsneConfig(perplexity=args.perplexity, theta=args.theta,
+                     n_iter=args.iters, neighbor_method=args.neighbor_method,
+                     n_neighbors=args.n_neighbors)
 
     t0 = time.perf_counter()
     graph, timings = preprocess(jnp.asarray(x), cfg)
-    print(f"KNN {timings['knn']:.1f}s  BSP {timings['bsp']:.1f}s  "
+    print(f"KNN[{timings['neighbor_method']}, k={timings['n_neighbors']}] "
+          f"{timings['knn']:.1f}s  BSP {timings['bsp']:.1f}s  "
           f"symmetrize {timings['symmetrize']:.1f}s")
 
     state = init_state(args.n, cfg)

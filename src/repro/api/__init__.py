@@ -15,12 +15,19 @@ from repro.api.backends import (
     available_backends, make_backend, register_backend, unregister_backend,
 )
 from repro.api.estimator import TSNE
+from repro.neighbors import (
+    NeighborBackend, available_neighbor_backends, make_neighbor_backend,
+    register_neighbor_backend, unregister_neighbor_backend,
+)
 
 __all__ = [
     "TSNE",
     "GradientBackend", "ExactBackend", "BarnesHutBackend", "FFTBackend",
     "register_backend", "unregister_backend", "available_backends",
     "make_backend",
+    "NeighborBackend", "register_neighbor_backend",
+    "unregister_neighbor_backend", "available_neighbor_backends",
+    "make_neighbor_backend",
     "GradResult", "IterationStats", "NeighborGraph", "ObserverFn",
     "TsneConfig", "TsneResult", "preprocess", "run_tsne",
 ]

@@ -36,6 +36,15 @@ class TSNE:
         ``TsneConfig`` field overrides for backend construction (e.g.
         ``{"use_pallas": True}``, ``{"compress_tree": False}``,
         ``{"fft_n_boxes": 96}``).
+    n_neighbors : int or None
+        KNN graph degree; ``None`` = sklearn's ``int(3 * perplexity)``.
+        Always clamped to ``n_samples - 1``.
+    neighbor_method : str
+        registered neighbor backend for the KNN stage
+        (``"exact"`` | ``"rp_forest"`` | ``"nn_descent"`` | custom).
+    neighbor_options : mapping
+        constructor options for the neighbor backend (e.g.
+        ``{"n_trees": 16}``, ``{"refine_iters": 3}``).
     """
 
     def __init__(
@@ -54,6 +63,9 @@ class TSNE:
         callbacks: Iterable[ObserverFn] = (),
         kl_every: int = 50,
         backend_options: Mapping | None = None,
+        n_neighbors: int | None = None,
+        neighbor_method: str = "exact",
+        neighbor_options: Mapping | None = None,
     ):
         self.n_components = n_components
         self.perplexity = perplexity
@@ -68,6 +80,9 @@ class TSNE:
         self.callbacks = tuple(callbacks)
         self.kl_every = kl_every
         self.backend_options = dict(backend_options or {})
+        self.n_neighbors = n_neighbors
+        self.neighbor_method = neighbor_method
+        self.neighbor_options = dict(neighbor_options or {})
 
     # -- sklearn plumbing ---------------------------------------------------
 
@@ -86,6 +101,9 @@ class TSNE:
             "callbacks": self.callbacks,
             "kl_every": self.kl_every,
             "backend_options": self.backend_options,
+            "n_neighbors": self.n_neighbors,
+            "neighbor_method": self.neighbor_method,
+            "neighbor_options": self.neighbor_options,
         }
 
     def set_params(self, **params) -> "TSNE":
@@ -108,6 +126,9 @@ class TSNE:
             seed=0 if self.random_state is None else int(self.random_state),
             method=self.method if isinstance(self.method, str)
             else getattr(self.method, "name", "barnes_hut"),
+            n_neighbors=self.n_neighbors,
+            neighbor_method=self.neighbor_method,
+            neighbor_options=self.neighbor_options or None,
         )
         if self.backend_options:
             cfg = dataclasses.replace(cfg, **self.backend_options)

@@ -7,9 +7,10 @@ directed KNN neighborhoods in two interchangeable layouts:
   [N, W] matrix, W = max symmetric row degree (<= K + max indegree).  Runs
   once before gradient descent, so host preprocessing is fine; the GD loop
   then uses paper-Algorithm-2 verbatim (attractive_forces_ell).
-* ``edge_list`` — jit-safe directed edge list (2 x ... no: N*K edges, each
-  applied to both endpoints by attractive_forces_edges).  Used by the fully
-  jitted / distributed path; numerically identical forces.
+* ``edge_list`` — jit-safe directed edge list of N*K edges; each edge is
+  applied to both endpoints by attractive_forces_edges, so the symmetric
+  sum over ordered pairs is recovered without materializing it.  Used by
+  the fully jitted / distributed path; numerically identical forces.
 """
 from __future__ import annotations
 

@@ -16,14 +16,13 @@ from __future__ import annotations
 import dataclasses
 import functools
 import time
-from typing import Any, Callable, NamedTuple
+from typing import Any, Callable, Mapping, NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import attractive, bsp, morton, quadtree, similarity
-from repro.core.knn import knn as _knn
 from repro.core.summarize import summarize as _summarize
 from repro.core.repulsive import bh_repulsion_sorted
 
@@ -50,6 +49,12 @@ class TsneConfig:
     depth: int | str = morton.DEFAULT_DEPTH   # "auto" = morton.auto_depth(N)
     seed: int = 0
     dtype: Any = jnp.float32
+    n_neighbors: int | None = None        # None = int(3 * perplexity); clamped to n-1
+    # registered neighbor backend ('exact' | 'rp_forest' | 'nn_descent' | ...)
+    neighbor_method: str = "exact"
+    # accepts a mapping; normalized to a sorted item tuple so the config
+    # stays hashable (backends may embed it as a static jit argument)
+    neighbor_options: Mapping[str, Any] | tuple | None = None
     knn_block_q: int = 512
     knn_block_db: int = 2048
     use_pallas: bool = False              # route hot loops through Pallas kernels
@@ -60,13 +65,33 @@ class TsneConfig:
     method: str = "barnes_hut"            # registered gradient backend name
     fft_n_boxes: int = 48                 # grid boxes/dim for the 'fft' backend
 
+    def __post_init__(self):
+        if isinstance(self.neighbor_options, Mapping):
+            object.__setattr__(
+                self, "neighbor_options",
+                tuple(sorted(self.neighbor_options.items())),
+            )
+
     def resolve_lr(self, n: int) -> float:
         if self.learning_rate == "auto":
             return max(n / self.early_exaggeration, 50.0)
         return float(self.learning_rate)
 
-    def n_neighbors(self) -> int:
-        return int(3.0 * self.perplexity)
+    def resolve_n_neighbors(self, n: int) -> int:
+        k = int(3.0 * self.perplexity) if self.n_neighbors is None \
+            else int(self.n_neighbors)
+        return max(1, min(k, n - 1))
+
+    def resolve_neighbor_options(self) -> dict:
+        """Backend options with config-level defaults folded in."""
+        opts = dict(self.neighbor_options or {})
+        if self.neighbor_method == "exact":
+            opts.setdefault("block_q", self.knn_block_q)
+            opts.setdefault("block_db", self.knn_block_db)
+            opts.setdefault("pairwise", "pallas" if self.use_pallas else "xla")
+        elif self.neighbor_method in ("rp_forest", "nn_descent"):
+            opts.setdefault("seed", self.seed)
+        return opts
 
     def resolve_depth(self, n: int) -> int:
         return morton.auto_depth(n) if self.depth == "auto" else int(self.depth)
@@ -249,14 +274,21 @@ ObserverFn = Callable[[IterationStats], None]
 
 
 def preprocess(x: jax.Array, config: TsneConfig) -> tuple[NeighborGraph, dict]:
-    """KNN + BSP + symmetrization -> (NeighborGraph, stage timings)."""
-    k = config.n_neighbors()
-    t0 = time.perf_counter()
-    idx, d2 = _knn(
-        x.astype(config.dtype), k,
-        block_q=config.knn_block_q, block_db=config.knn_block_db,
-        pairwise_fn_name="pallas" if config.use_pallas else "xla",
+    """KNN + BSP + symmetrization -> (NeighborGraph, stage timings).
+
+    The KNN stage dispatches through the ``repro.neighbors`` registry
+    (``config.neighbor_method``); the timings dict records which backend ran
+    (``neighbor_method``), the resolved ``n_neighbors``, and ``knn_mean_d2``
+    — the mean selected squared distance, directly comparable against the
+    exact backend's value on the same data as a recall proxy.
+    """
+    from repro.neighbors import make_neighbor_backend  # lazy: builds on core
+    k = config.resolve_n_neighbors(int(x.shape[0]))
+    nb = make_neighbor_backend(
+        config.neighbor_method, config.resolve_neighbor_options()
     )
+    t0 = time.perf_counter()
+    idx, d2 = nb.neighbors(x.astype(config.dtype), k)
     idx.block_until_ready()
     t_knn = time.perf_counter() - t0
 
@@ -303,7 +335,11 @@ def preprocess(x: jax.Array, config: TsneConfig) -> tuple[NeighborGraph, dict]:
         has_edges=has_edges,
     )
     t_sym = time.perf_counter() - t0
-    return graph, dict(knn=t_knn, bsp=t_bsp, symmetrize=t_sym)
+    return graph, dict(
+        knn=t_knn, bsp=t_bsp, symmetrize=t_sym,
+        neighbor_method=nb.name, n_neighbors=k,
+        knn_mean_d2=float(jnp.mean(d2)),
+    )
 
 
 def init_state(n: int, config: TsneConfig) -> TsneState:

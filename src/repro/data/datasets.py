@@ -9,6 +9,7 @@ comparisons between implementations are meaningful.
 from __future__ import annotations
 
 import dataclasses
+import zlib
 
 import numpy as np
 
@@ -37,7 +38,8 @@ def make_dataset(name: str, n: int | None = None, seed: int = 0):
     """Returns (x [n, dim] float32, labels [n] int32)."""
     spec = SPECS[name]
     n = n or spec.n
-    rng = np.random.default_rng(seed + hash(name) % 2**16)
+    # crc32, not hash(): stable across processes regardless of PYTHONHASHSEED
+    rng = np.random.default_rng(seed + zlib.crc32(name.encode()) % 2**16)
     centers = rng.normal(size=(spec.classes, spec.latent)) * 4.0
     labels = rng.integers(0, spec.classes, size=n)
     latent = centers[labels] + rng.normal(size=(n, spec.latent))

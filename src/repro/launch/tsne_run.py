@@ -50,7 +50,7 @@ def main():
     mesh = jax.make_mesh((args.devices,), ("data",))
     n = args.n - args.n % args.devices
     x = jnp.asarray(x[:n])
-    k = cfg.n_neighbors()
+    k = cfg.resolve_n_neighbors(n)
     idx, d2 = ring_knn(mesh, x, k)
     cond_p, _ = bsp.binary_search_perplexity(d2, cfg.perplexity)
     cols, vals = symmetrize_ell(np.asarray(idx), np.asarray(cond_p))

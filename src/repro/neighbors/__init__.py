@@ -1,0 +1,28 @@
+"""Pluggable K-nearest-neighbor backends (paper §3.1, beyond exact).
+
+    from repro.neighbors import make_neighbor_backend
+    idx, d2 = make_neighbor_backend("rp_forest").neighbors(x, k)
+
+Backends ("exact" | "rp_forest" | "nn_descent", or your own via
+:func:`register_neighbor_backend`) plug in behind ``preprocess`` /
+``TSNE(neighbor_method=...)`` exactly like gradient backends do behind
+``method=``.
+"""
+from repro.neighbors.base import (
+    NeighborBackend, available_neighbor_backends, make_neighbor_backend,
+    recall_at_k, register_neighbor_backend, unregister_neighbor_backend,
+    validate_k,
+)
+from repro.neighbors.exact import ExactNeighbors
+from repro.neighbors.rp_forest import RPForestNeighbors, rp_forest_knn
+from repro.neighbors.nn_descent import NNDescentNeighbors, nn_descent_knn
+from repro.neighbors._candidates import merge_topk, seed_graph
+
+__all__ = [
+    "NeighborBackend",
+    "ExactNeighbors", "RPForestNeighbors", "NNDescentNeighbors",
+    "register_neighbor_backend", "unregister_neighbor_backend",
+    "available_neighbor_backends", "make_neighbor_backend", "validate_k",
+    "recall_at_k", "rp_forest_knn", "nn_descent_knn", "merge_topk",
+    "seed_graph",
+]

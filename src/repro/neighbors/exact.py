@@ -1,0 +1,36 @@
+"""Exact neighbor backend — the blocked brute force from ``core/knn.py``.
+
+O(N²·D), but every distance is evaluated on the MXU (Pallas or XLA pairwise
+tiles), so it is the right default up to ~50k points and the recall oracle
+for the approximate backends at any size.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import ClassVar
+
+import jax
+
+from repro.core.knn import knn
+from repro.neighbors.base import register_neighbor_backend, validate_k
+
+
+@dataclasses.dataclass(frozen=True)
+class ExactNeighbors:
+    """Blocked brute-force KNN (paper §3.1 — recall 1.0 by construction)."""
+
+    name: ClassVar[str] = "exact"
+    block_q: int = 512
+    block_db: int = 2048
+    pairwise: str = "xla"          # "xla" | "pallas" distance-tile kernel
+
+    def neighbors(self, x: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:
+        validate_k(x.shape[0], k)
+        return knn(
+            x, k,
+            block_q=self.block_q, block_db=self.block_db,
+            pairwise_fn_name=self.pairwise,
+        )
+
+
+register_neighbor_backend("exact", ExactNeighbors)

@@ -1,0 +1,156 @@
+"""Random-projection tree forest (Annoy / FIt-SNE-style approximate KNN).
+
+Each tree recursively halves the point set ``depth`` times with a median
+hyperplane split — expressed as one multi-key ``lax.sort`` per level over
+(segment id, projection), so the whole forest build is a handful of sorts
+and matmuls, fully jittable with static shapes.  Leaves then hold
+``ceil(N / 2^depth)`` points; within each leaf we score all pairs exactly
+and keep the top-k, and the per-tree graphs are merged with duplicate
+dropping.  Recall grows with ``n_trees`` and ``leaf_size``; an optional
+``refine_iters`` polish runs NN-descent over the forest output.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import ClassVar
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.neighbors._candidates import merge_topk, seed_graph
+from repro.neighbors.base import register_neighbor_backend, validate_k
+
+
+@functools.partial(jax.jit, static_argnames=("depth", "n_pad"))
+def _build_tree_leaves(
+    x: jax.Array, key: jax.Array, depth: int, n_pad: int
+) -> jax.Array:
+    """One tree: [2^depth, leaf_size] point indices (pads hold idx >= N).
+
+    Level ``l`` sorts each of the 2^l equal-length segments by the points'
+    projection onto that level's random direction; halving sorted segments
+    is exactly a median split, so the tree stays perfectly balanced.  Pads
+    project to +inf and sink to the high side of every split.
+    """
+    n, d = x.shape
+    dirs = jax.random.normal(key, (depth, d), x.dtype) if depth else None
+    proj = x @ dirs.T if depth else None             # [N, depth]
+    order = jnp.arange(n_pad, dtype=jnp.int32)
+    big = jnp.asarray(jnp.finfo(x.dtype).max, x.dtype)
+    pos = jnp.arange(n_pad, dtype=jnp.int32)
+    for level in range(depth):
+        seg = pos // (n_pad >> level)
+        p = jnp.where(order < n, proj[jnp.clip(order, 0, n - 1), level], big)
+        _, _, order = lax.sort((seg, p, order), num_keys=2)
+    return order.reshape(1 << depth, n_pad >> depth)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "n_pad"))
+def _leaf_topk(x: jax.Array, leaves: jax.Array, k: int, n_pad: int):
+    """Exact top-k within each leaf's candidate set, scattered per point.
+
+    Returns ``(idx [n_pad, kk], d2 [n_pad, kk])`` with ``kk = min(k, S-1)``;
+    rows >= N are pad slots the caller slices off.
+    """
+    n = x.shape[0]
+    n_leaves, s = leaves.shape
+    kk = min(k, s - 1)
+    safe = jnp.clip(leaves, 0, n - 1)
+    xb = x[safe]                                     # [L, S, D]
+    sqn = jnp.sum(xb * xb, axis=2)
+    d2 = sqn[:, :, None] + sqn[:, None, :] - 2.0 * jnp.einsum(
+        "lsd,ltd->lst", xb, xb
+    )
+    big = jnp.asarray(jnp.finfo(x.dtype).max, x.dtype)
+    pad_col = (leaves >= n)[:, None, :]
+    self_col = jnp.eye(s, dtype=bool)[None]
+    d2 = jnp.where(pad_col | self_col, big, d2)
+    neg_top, argtop = lax.top_k(-d2, kk)             # [L, S, kk]
+    glob = jnp.take_along_axis(
+        jnp.broadcast_to(leaves[:, None, :], (n_leaves, s, s)), argtop, axis=2
+    )
+    out_i = jnp.zeros((n_pad, kk), jnp.int32).at[leaves.reshape(-1)].set(
+        glob.reshape(-1, kk)
+    )
+    out_d = jnp.zeros((n_pad, kk), x.dtype).at[leaves.reshape(-1)].set(
+        jnp.maximum(-neg_top, 0.0).reshape(-1, kk)
+    )
+    return out_i, out_d
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "n_trees", "depth", "block_rows")
+)
+def rp_forest_knn(
+    x: jax.Array,
+    k: int,
+    *,
+    n_trees: int = 8,
+    depth: int = 4,
+    seed: int = 0,
+    block_rows: int = 512,
+) -> tuple[jax.Array, jax.Array]:
+    """Approximate KNN via ``n_trees`` RP trees of ``depth`` median splits."""
+    n = x.shape[0]
+    leaf = -(-n // (1 << depth))                     # ceil(n / 2^depth)
+    n_pad = leaf << depth
+    key = jax.random.PRNGKey(seed)
+    best_i, best_d = seed_graph(x, k, jax.random.fold_in(key, n_trees),
+                                block_rows=block_rows)
+    # collect every tree's within-leaf top-k, then fold once: a single wide
+    # dedup/top-k merge beats n_trees narrow ones (the sort dominates)
+    cand_i, cand_d = [], []
+    for t in range(n_trees):
+        leaves = _build_tree_leaves(x, jax.random.fold_in(key, t), depth, n_pad)
+        ti, td = _leaf_topk(x, leaves, k, n_pad)
+        cand_i.append(ti[:n])
+        cand_d.append(td[:n])
+    return merge_topk(
+        best_i, best_d,
+        jnp.concatenate(cand_i, axis=1), jnp.concatenate(cand_d, axis=1),
+        k, n,
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class RPForestNeighbors:
+    """Forest of random-projection trees; ``refine_iters`` adds NN-descent
+    polish passes over the forest graph (see ``nn_descent.py``)."""
+
+    name: ClassVar[str] = "rp_forest"
+    n_trees: int = 8
+    leaf_size: int = 64
+    refine_iters: int = 2
+    seed: int = 0
+    block_rows: int = 512
+
+    def resolve_depth(self, n: int, k: int) -> int:
+        """Deepest split keeping leaves >= max(leaf_size, k+1) points, so a
+        single leaf can supply a full top-k row."""
+        leaf = max(self.leaf_size, k + 1)
+        return max(0, int(math.floor(math.log2(max(1.0, n / leaf)))))
+
+    def neighbors(self, x: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:
+        validate_k(x.shape[0], k)
+        idx, d2 = rp_forest_knn(
+            x, k,
+            n_trees=self.n_trees,
+            depth=self.resolve_depth(x.shape[0], k),
+            seed=self.seed,
+            block_rows=self.block_rows,
+        )
+        if self.refine_iters > 0:
+            from repro.neighbors.nn_descent import nn_descent_knn
+            # offset the seed: refine rounds must not replay the PRNG keys
+            # that drew the tree hyperplanes (fold_in shares the int domain)
+            idx, d2 = nn_descent_knn(
+                x, k, init=(idx, d2), n_iters=self.refine_iters,
+                seed=self.seed + 1, block_rows=self.block_rows,
+            )
+        return idx, d2
+
+
+register_neighbor_backend("rp_forest", RPForestNeighbors)

@@ -385,6 +385,7 @@ class TestEndToEnd:
                 inter.append(np.linalg.norm(cents[i] - cents[j]))
         assert np.mean(intra) < 0.5 * np.mean(inter)
 
+    @pytest.mark.slow
     def test_edges_impl_close_to_ell(self):
         n = 300
         x, _ = make_points(n, seed=71, clusters=3, dim=10)

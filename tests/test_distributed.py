@@ -20,6 +20,7 @@ def run_sub(code: str):
     return out.stdout
 
 
+@pytest.mark.slow
 def test_distributed_bh_gradient_matches_single_device():
     run_sub("""
         import jax, jax.numpy as jnp, numpy as np

@@ -1,0 +1,185 @@
+"""repro.neighbors: registry round-trip, recall vs the exact oracle, and
+KL-parity of BH t-SNE on an approximate vs exact neighbor graph."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.tsne import TsneConfig, preprocess, run_tsne
+from repro.data.datasets import make_dataset
+from repro.neighbors import (
+    ExactNeighbors, NNDescentNeighbors, RPForestNeighbors,
+    available_neighbor_backends, make_neighbor_backend, recall_at_k,
+    register_neighbor_backend, unregister_neighbor_backend,
+)
+
+
+@pytest.fixture(scope="module")
+def digits_oracle():
+    """digits-scale planted-cluster data + the exact KNN reference."""
+    x, _ = make_dataset("digits")            # 1797 x 64, 10 clusters
+    x = jnp.asarray(x)
+    k = 15
+    idx, d2 = ExactNeighbors().neighbors(x, k)
+    return x, k, np.asarray(idx), np.asarray(d2)
+
+
+# ------------------------------------------------------------- registry -----
+class TestRegistry:
+    def test_builtins_registered(self):
+        assert {"exact", "rp_forest", "nn_descent"} <= set(
+            available_neighbor_backends()
+        )
+
+    def test_unknown_method_raises(self):
+        with pytest.raises(ValueError, match="unknown neighbor method"):
+            make_neighbor_backend("nope")
+        with pytest.raises(ValueError, match="unknown neighbor method"):
+            preprocess(
+                jnp.zeros((64, 4)), TsneConfig(perplexity=5.0,
+                                               neighbor_method="nope"),
+            )
+
+    def test_options_flow_into_backend(self):
+        be = make_neighbor_backend("rp_forest", {"n_trees": 3, "leaf_size": 32})
+        assert be.n_trees == 3 and be.leaf_size == 32
+        assert make_neighbor_backend("nn_descent", {"n_iters": 5}).n_iters == 5
+        assert make_neighbor_backend("exact", {"block_q": 128}).block_q == 128
+
+    def test_register_unregister_roundtrip(self):
+        @register_neighbor_backend("tagged_exact")
+        def make_tagged(**options):
+            return ExactNeighbors(**options)
+
+        try:
+            assert "tagged_exact" in available_neighbor_backends()
+            be = make_neighbor_backend("tagged_exact", {"block_db": 256})
+            assert be.block_db == 256
+            x = jnp.asarray(np.random.default_rng(0).normal(size=(64, 4)),
+                            jnp.float32)
+            idx, d2 = be.neighbors(x, 5)
+            assert idx.shape == (64, 5)
+        finally:
+            unregister_neighbor_backend("tagged_exact")
+        assert "tagged_exact" not in available_neighbor_backends()
+        # unregistering an unknown name is a no-op
+        unregister_neighbor_backend("tagged_exact")
+
+    def test_k_validation(self):
+        x = jnp.zeros((8, 3))
+        for name in ("exact", "rp_forest", "nn_descent"):
+            with pytest.raises(ValueError, match="must be <"):
+                make_neighbor_backend(name).neighbors(x, 8)
+
+
+# ---------------------------------------------------------------- recall ----
+class TestRecall:
+    def _check_valid(self, idx, n, k):
+        idx = np.asarray(idx)
+        assert idx.shape == (n, k)
+        assert ((idx >= 0) & (idx < n)).all(), "out-of-range neighbor index"
+        assert not (idx == np.arange(n)[:, None]).any(), "self-neighbor"
+        srt = np.sort(idx, axis=1)
+        assert not (srt[:, 1:] == srt[:, :-1]).any(), "duplicate neighbor"
+
+    def test_rp_forest_recall(self, digits_oracle):
+        x, k, ref_idx, _ = digits_oracle
+        idx, d2 = RPForestNeighbors().neighbors(x, k)
+        self._check_valid(idx, x.shape[0], k)
+        assert recall_at_k(ref_idx, idx) >= 0.90
+        assert (np.asarray(d2) >= 0).all()
+
+    def test_nn_descent_recall(self, digits_oracle):
+        x, k, ref_idx, _ = digits_oracle
+        idx, d2 = NNDescentNeighbors().neighbors(x, k)
+        self._check_valid(idx, x.shape[0], k)
+        assert recall_at_k(ref_idx, idx) >= 0.90
+        assert (np.asarray(d2) >= 0).all()
+
+    def test_refine_improves_forest(self, digits_oracle):
+        x, k, ref_idx, _ = digits_oracle
+        raw = RPForestNeighbors(n_trees=2, refine_iters=0).neighbors(x, k)[0]
+        polished = RPForestNeighbors(n_trees=2, refine_iters=3).neighbors(x, k)[0]
+        assert recall_at_k(ref_idx, polished) >= recall_at_k(ref_idx, raw)
+
+    def test_approx_distances_are_exact_for_selected(self, digits_oracle):
+        # approximate backends may pick suboptimal neighbors, but the d2 they
+        # report for them must be the true squared distances
+        x, k, _, _ = digits_oracle
+        idx, d2 = RPForestNeighbors(n_trees=2).neighbors(x, k)
+        xs = np.asarray(x)
+        sub = slice(0, 200)
+        ref = ((xs[sub, None, :] - xs[np.asarray(idx)[sub]]) ** 2).sum(-1)
+        np.testing.assert_allclose(np.asarray(d2)[sub], ref, rtol=1e-3,
+                                   atol=1e-2)
+
+
+# ----------------------------------------------------------- n_neighbors ----
+class TestNNeighborsParam:
+    def test_default_and_override(self):
+        cfg = TsneConfig(perplexity=10.0)
+        assert cfg.resolve_n_neighbors(1000) == 30
+        assert dataclasses.replace(cfg, n_neighbors=7).resolve_n_neighbors(1000) == 7
+
+    def test_clamped_to_n_minus_one(self):
+        # previously int(3 * perplexity) >= n tripped the k >= n ValueError
+        cfg = TsneConfig(perplexity=10.0)
+        assert cfg.resolve_n_neighbors(20) == 19
+        x = jnp.asarray(np.random.default_rng(1).normal(size=(20, 5)),
+                        jnp.float32)
+        graph, timings = preprocess(x, cfg)
+        assert timings["n_neighbors"] == 19
+
+    def test_config_with_options_stays_hashable(self):
+        # backends may embed the config as a static jit argument; a mapping
+        # passed in is normalized to a sorted item tuple
+        cfg = TsneConfig(neighbor_method="rp_forest",
+                         neighbor_options={"n_trees": 4, "refine_iters": 1})
+        hash(cfg)
+        opts = cfg.resolve_neighbor_options()
+        assert opts["n_trees"] == 4 and opts["refine_iters"] == 1
+
+    def test_estimator_forwards(self):
+        from repro.api import TSNE
+        x, _ = make_dataset("digits", n=200)
+        est = TSNE(perplexity=8.0, n_iter=40, kl_every=20, n_neighbors=10,
+                   neighbor_method="rp_forest",
+                   neighbor_options={"n_trees": 2, "refine_iters": 1})
+        est.fit(x)
+        assert est.timings_["n_neighbors"] == 10
+        assert est.timings_["neighbor_method"] == "rp_forest"
+        params = est.get_params()
+        assert params["n_neighbors"] == 10
+        assert params["neighbor_method"] == "rp_forest"
+
+
+# ------------------------------------------------------------- KL parity ----
+class TestKLParity:
+    @pytest.mark.slow
+    def test_bh_kl_on_approximate_graph(self):
+        """BH t-SNE on an rp_forest graph lands within tolerance of the
+        exact-graph KL (the paper's accuracy claim survives approximate KNN)."""
+        x, _ = make_dataset("digits", n=800)
+        kl = {}
+        for method in ("exact", "rp_forest"):
+            cfg = TsneConfig(perplexity=12.0, n_iter=150, exaggeration_iters=50,
+                             momentum_switch_iter=50, seed=3,
+                             neighbor_method=method)
+            kl[method] = run_tsne(x, cfg, kl_every=150).kl
+        assert np.isfinite(kl["rp_forest"])
+        assert abs(kl["rp_forest"] - kl["exact"]) < 0.15
+
+
+# ----------------------------------------------------- dataset stability ----
+class TestDatasetSeed:
+    def test_generation_deterministic(self):
+        a, la = make_dataset("digits", n=64)
+        b, lb = make_dataset("digits", n=64)
+        np.testing.assert_array_equal(a, b)
+        np.testing.assert_array_equal(la, lb)
+
+    def test_name_digest_differentiates(self):
+        a, _ = make_dataset("mnist", n=64)
+        b, _ = make_dataset("fashion_mnist", n=64)   # same spec shape family
+        assert a.shape == b.shape and not np.allclose(a, b)

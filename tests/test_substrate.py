@@ -101,6 +101,7 @@ class TestFaultTolerance:
                              ckpt_dir=str(tmp_path), fail_at_step=fail_at)
         return Trainer(model, pipe, tcfg, donate=False)
 
+    @pytest.mark.slow
     def test_restart_is_bit_exact(self, tmp_path):
         # uninterrupted run
         clean = self._make_trainer(tmp_path / "clean")
