@@ -1,6 +1,13 @@
-"""Shared benchmark utilities: timing, CSV emission, fixture construction."""
+"""Shared benchmark utilities: timing, CSV emission, JSON artifacts,
+fixture construction."""
 from __future__ import annotations
 
+import datetime
+import json
+import os
+import pathlib
+import platform
+import re
 import time
 
 import jax
@@ -18,6 +25,57 @@ ROWS: list[tuple[str, float, str]] = []
 def emit(name: str, us_per_call: float, derived: str = ""):
     ROWS.append((name, us_per_call, derived))
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def machine_info() -> dict:
+    """Host fingerprint stored alongside every benchmark artifact, so
+    numbers from different machines are never compared blind."""
+    return dict(
+        platform=platform.platform(),
+        processor=platform.processor() or platform.machine(),
+        python=platform.python_version(),
+        cpu_count=os.cpu_count(),
+        jax=jax.__version__,
+        jax_backend=jax.default_backend(),
+        devices=[str(d) for d in jax.devices()],
+    )
+
+
+def next_bench_path(out_dir) -> pathlib.Path:
+    """First free ``BENCH_<n>.json`` slot in ``out_dir`` (monotonic n)."""
+    out_dir = pathlib.Path(out_dir)
+    taken = [
+        int(m.group(1))
+        for f in out_dir.glob("BENCH_*.json")
+        if (m := re.fullmatch(r"BENCH_(\d+)\.json", f.name))
+    ]
+    return out_dir / f"BENCH_{max(taken, default=-1) + 1}.json"
+
+
+def write_bench_json(out_dir, *, benches, argv, wall_s) -> pathlib.Path:
+    """Persist every row emitted so far as the next ``BENCH_<n>.json``.
+
+    The artifact is the per-PR perf trajectory: ``results`` mirrors the CSV
+    rows (name / us_per_call / derived), plus machine info and provenance,
+    so regressions are diffable across commits instead of living only in
+    commit messages.
+    """
+    pathlib.Path(out_dir).mkdir(parents=True, exist_ok=True)
+    path = next_bench_path(out_dir)
+    payload = dict(
+        schema=1,
+        created=datetime.datetime.now(datetime.timezone.utc).isoformat(),
+        argv=list(argv),
+        benches=list(benches),
+        machine=machine_info(),
+        total_wall_s=round(wall_s, 2),
+        results=[
+            dict(name=n, us_per_call=round(us, 1), derived=d)
+            for n, us, d in ROWS
+        ],
+    )
+    path.write_text(json.dumps(payload, indent=2) + "\n")
+    return path
 
 
 def time_fn(fn, *args, warmup: int = 1, iters: int = 5, **kw) -> float:

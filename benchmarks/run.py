@@ -2,8 +2,12 @@
 
     PYTHONPATH=src python -m benchmarks.run [--bench steps,e2e,accuracy,scaling]
                                             [--quick] [--n N] [--scale S]
+                                            [--out-dir DIR | --no-json]
 
-Prints ``name,us_per_call,derived`` CSV rows (benchmarks.common.emit).
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks.common.emit) and
+persists the full run — rows + machine info + provenance — as the next
+``BENCH_<n>.json`` in ``--out-dir`` (default: the repo root), the per-PR
+perf-trajectory artifact the ROADMAP calls for.
 Paper mapping: steps -> Tables 5/6; e2e -> Table 4 / Fig 4; accuracy ->
 Table 3; scaling -> Fig 5/6 (algorithmic form — see bench_scaling docstring).
 Roofline reporting lives in benchmarks/roofline.py (reads dry-run JSON).
@@ -11,8 +15,11 @@ Roofline reporting lives in benchmarks/roofline.py (reads dry-run JSON).
 from __future__ import annotations
 
 import argparse
+import pathlib
 import sys
 import time
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
 
 
 def main() -> None:
@@ -21,6 +28,10 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true", help="small sizes (CI)")
     ap.add_argument("--n", type=int, default=None, help="points for step bench")
     ap.add_argument("--scale", type=float, default=None, help="e2e dataset scale")
+    ap.add_argument("--out-dir", default=str(REPO_ROOT),
+                    help="directory for the BENCH_<n>.json artifact")
+    ap.add_argument("--no-json", action="store_true",
+                    help="skip writing the BENCH_<n>.json artifact")
     args = ap.parse_args()
     benches = [b.strip() for b in args.bench.split(",") if b.strip()]
     t0 = time.time()
@@ -46,7 +57,14 @@ def main() -> None:
         bench_knn.run(sizes=(2000, 5000) if args.quick else (2000, 10000, 50000),
                       k=15 if args.quick else 30)
 
-    print(f"# total_bench_wall_s,{time.time() - t0:.1f},", file=sys.stderr)
+    wall_s = time.time() - t0
+    print(f"# total_bench_wall_s,{wall_s:.1f},", file=sys.stderr)
+    if not args.no_json:
+        from benchmarks.common import write_bench_json
+        path = write_bench_json(
+            args.out_dir, benches=benches, argv=sys.argv[1:], wall_s=wall_s
+        )
+        print(f"# wrote {path}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -1,23 +1,34 @@
 """LM representation atlas: run an assigned architecture, harvest hidden
-states, embed them with the distributed Barnes-Hut t-SNE.
+states, embed them with Barnes-Hut t-SNE — then GROW the atlas point by
+point through the continuous-batching embedding service.
 
     PYTHONPATH=src python examples/lm_embedding_atlas.py --arch deepseek_7b
 
 This is the integration the paper motivates (visualizing high-dimensional
-representations at scale — scRNA-seq there, LM token states here): the same
-framework trains/serves the model *and* provides the analysis stage.
-Reduced configs keep it CPU-sized; on a pod the t-SNE step shards points
-over the data axis (repro.core.distributed).
+representations at scale — scRNA-seq there, LM token states here) plus the
+deployment shape the ROADMAP names: a live embedding view over a corpus
+that keeps growing.  A reference corpus is fitted once; every later state
+is a single-point transform request drained through the fixed slot pool —
+no refit, frozen reference embedding, per-request latency stats.
 """
 import argparse
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
+from repro.api import TSNE, EmbeddingService, TransformRequest
 from repro.configs import ARCH_IDS, get_reduced_config
-from repro.core.tsne import TsneConfig, run_tsne
 from repro.models.model import build_model
+
+
+def domain_separation(y, labels, n_domains=4):
+    """Mean intra-domain spread vs mean inter-centroid distance."""
+    cents = np.stack([y[labels == d].mean(0) for d in range(n_domains)])
+    intra = np.mean([np.linalg.norm(y[labels == d] - cents[d], axis=1).mean()
+                     for d in range(n_domains)])
+    inter = np.mean([np.linalg.norm(a - b)
+                     for i, a in enumerate(cents) for b in cents[i + 1:]])
+    return intra, inter
 
 
 def main():
@@ -26,6 +37,9 @@ def main():
     ap.add_argument("--batches", type=int, default=8)
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--iters", type=int, default=300)
+    ap.add_argument("--slots", type=int, default=8)
+    ap.add_argument("--grow", type=int, default=32,
+                    help="states held out of the fit and grown point-by-point")
     ap.add_argument("--out", default="atlas.npy")
     args = ap.parse_args()
 
@@ -54,16 +68,41 @@ def main():
     x = (x - x.mean(0)) @ rng.normal(size=(x.shape[1], 50)).astype(np.float32) / np.sqrt(x.shape[1])
     labels = np.asarray(labels)
 
-    print(f"embedding {x.shape[0]} states from {args.arch}")
-    res = run_tsne(x, TsneConfig(perplexity=10.0, n_iter=args.iters,
-                                 exaggeration_iters=100, momentum_switch_iter=100))
-    np.save(args.out, res.y)
-    # domains with disjoint vocab ranges should separate
-    y = res.y
-    cents = np.stack([y[labels == d].mean(0) for d in range(4)])
-    intra = np.mean([np.linalg.norm(y[labels == d] - cents[d], axis=1).mean() for d in range(4)])
-    inter = np.mean([np.linalg.norm(a - b) for i, a in enumerate(cents) for b in cents[i + 1:]])
-    print(f"KL={res.kl:.3f}  intra={intra:.2f}  inter={inter:.2f}  -> {args.out}")
+    # interleave domains in the held-out tail so growth mixes clusters
+    perm = rng.permutation(x.shape[0])
+    x, labels = x[perm], labels[perm]
+    n_grow = min(args.grow, x.shape[0] // 4)
+    x_fit, x_new = x[:-n_grow], x[-n_grow:]
+
+    print(f"fitting atlas on {x_fit.shape[0]} states from {args.arch} "
+          f"(holding out {n_grow} to grow through the service)")
+    est = TSNE(perplexity=10.0, n_iter=args.iters, kl_every=100,
+               random_state=0,
+               backend_options=dict(exaggeration_iters=100,
+                                    momentum_switch_iter=100))
+    est.fit(x_fit)
+
+    service = EmbeddingService(slots=args.slots)
+    service.add_model("atlas", est)
+    for i, xi in enumerate(x_new):
+        service.submit(TransformRequest(rid=i, dataset="atlas", x=xi))
+    done = service.run()
+    assert len(done) == n_grow
+    y_new = np.stack([r.y for r in sorted(done, key=lambda r: r.rid)])
+    y = np.concatenate([est.embedding_, y_new], axis=0)
+    np.save(args.out, y)
+
+    # domains with disjoint vocab ranges should separate — for the fitted
+    # points AND the points grown through the service
+    intra, inter = domain_separation(y, labels)
+    intra_new, inter_new = domain_separation(y_new, labels[-n_grow:])
+    s = service.stats()
+    print(f"KL={est.kl_divergence_:.3f}  intra={intra:.2f}  inter={inter:.2f}"
+          f"  (grown-only: intra={intra_new:.2f} inter={inter_new:.2f})"
+          f"  -> {args.out}")
+    print(f"service: {s['completed']} requests, {s['ticks']} ticks, "
+          f"mean {s['steps_mean']:.0f} steps, "
+          f"p50 latency {s['latency_s_p50'] * 1e3:.0f}ms")
 
 
 if __name__ == "__main__":

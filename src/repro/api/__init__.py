@@ -16,18 +16,21 @@ from repro.api.backends import (
 )
 from repro.api.estimator import TSNE
 from repro.neighbors import (
-    NeighborBackend, available_neighbor_backends, make_neighbor_backend,
-    register_neighbor_backend, unregister_neighbor_backend,
+    NeighborBackend, NeighborIndex, available_neighbor_backends,
+    build_query_index, make_neighbor_backend, register_neighbor_backend,
+    unregister_neighbor_backend,
 )
+from repro.embed import EmbeddingService, TransformConfig, TransformRequest
 
 __all__ = [
     "TSNE",
     "GradientBackend", "ExactBackend", "BarnesHutBackend", "FFTBackend",
     "register_backend", "unregister_backend", "available_backends",
     "make_backend",
-    "NeighborBackend", "register_neighbor_backend",
+    "NeighborBackend", "NeighborIndex", "register_neighbor_backend",
     "unregister_neighbor_backend", "available_neighbor_backends",
-    "make_neighbor_backend",
+    "make_neighbor_backend", "build_query_index",
+    "EmbeddingService", "TransformConfig", "TransformRequest",
     "GradResult", "IterationStats", "NeighborGraph", "ObserverFn",
     "TsneConfig", "TsneResult", "preprocess", "run_tsne",
 ]

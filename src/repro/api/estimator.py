@@ -9,12 +9,14 @@ registry ("fft" ships in-box), or a :class:`GradientBackend` instance.
 from __future__ import annotations
 
 import dataclasses
+import json
 from typing import Iterable, Mapping
 
 import numpy as np
 
 from repro.core.tsne import (
-    IterationStats, ObserverFn, TsneConfig, TsneResult, run_tsne,
+    IterationStats, NeighborGraph, ObserverFn, TsneConfig, TsneResult,
+    run_tsne,
 )
 from repro.api.backends import GradientBackend, make_backend
 
@@ -200,9 +202,145 @@ class TSNE:
         self.learning_rate_ = config.resolve_lr(n)
         self.timings_ = result.timings
         self.n_features_in_ = x.shape[1]
+        self.neighbor_graph_ = result.graph
+        self.n_neighbors_ = config.resolve_n_neighbors(n)
+        self._x_fit = x
+        self._query_index = None            # built lazily on first transform
         return self
 
     def fit_transform(self, x, y=None) -> np.ndarray:
         """Fit x and return the [n_samples, 2] embedding."""
         self.fit(x, y)
         return self.embedding_
+
+    # -- out-of-sample ------------------------------------------------------
+
+    def _check_fitted(self) -> None:
+        if getattr(self, "embedding_", None) is None:
+            raise ValueError("this TSNE instance is not fitted yet — call "
+                             "fit / fit_transform (or TSNE.load) first")
+
+    @property
+    def query_index_(self):
+        """Neighbor-backend query index over the fitted inputs (lazy).
+
+        Built by the same backend that built the fit-time KNN graph
+        (``rp_forest`` reuses its forest; backends without a query path fall
+        back to exact), then cached until the next ``fit``.
+        """
+        self._check_fitted()
+        if getattr(self, "_query_index", None) is None:
+            from repro.neighbors import build_query_index, make_neighbor_backend
+            config = self._build_config(self._x_fit.shape[0])
+            backend = make_neighbor_backend(
+                config.neighbor_method, config.resolve_neighbor_options()
+            )
+            self._query_index = build_query_index(backend, self._x_fit)
+        return self._query_index
+
+    @property
+    def query_k_(self) -> int:
+        """Neighbor width for out-of-sample queries (the fit-time k)."""
+        self._check_fitted()
+        return int(self.n_neighbors_)
+
+    def transform(self, x_new, *, transform_config=None,
+                  return_stats: bool = False):
+        """Embed new points into the *frozen* fitted embedding — no refit.
+
+        Each row of ``x_new [M, n_features]`` finds its ``query_k_`` nearest
+        fitted inputs through the fitted neighbor structure, receives
+        perplexity-calibrated similarities over them, and descends
+        (attractive-only, momentum + gains, per-point early stop) against
+        their frozen embedding coordinates, starting from their p-weighted
+        mean.  Fixed-shape jitted step: batches of any size share one trace.
+
+        Returns ``y [M, 2]`` (and per-point ``TransformStats`` when
+        ``return_stats=True``).
+        """
+        from repro.embed.transform import TransformConfig, transform_batch
+
+        self._check_fitted()
+        x_new = np.asarray(x_new, np.float32)
+        if x_new.ndim != 2 or x_new.shape[1] != self.n_features_in_:
+            raise ValueError(
+                f"expected x_new shaped [m, {self.n_features_in_}], got "
+                f"{x_new.shape}"
+            )
+        cfg = transform_config or TransformConfig()
+        perp = cfg.perplexity if cfg.perplexity is not None else self.perplexity
+        y, stats = transform_batch(
+            x_new, self.query_index_, self.embedding_,
+            k=self.query_k_, perplexity=float(perp), config=cfg,
+        )
+        return (y, stats) if return_stats else y
+
+    # -- persistence --------------------------------------------------------
+
+    _SAVE_SCHEMA = 1
+
+    def save(self, path) -> None:
+        """Persist the fitted state (npz): embedding, fitted inputs, sparse-P
+        neighbor graph, and constructor params — enough for ``load`` to serve
+        ``transform`` queries in another process without refitting."""
+        self._check_fitted()
+        params = self.get_params()
+        params.pop("callbacks", None)       # not serializable, fit-only
+        if not isinstance(params["method"], str):
+            params["method"] = getattr(params["method"], "name", "barnes_hut")
+        arrays = dict(
+            schema=np.int32(self._SAVE_SCHEMA),
+            embedding=np.asarray(self.embedding_, np.float32),
+            x_fit=np.asarray(self._x_fit, np.float32),
+            kl_divergence=np.float64(self.kl_divergence_),
+            kl_history=np.asarray(self.kl_history_, np.float64),
+            n_iter_run=np.int32(self.n_iter_),
+            learning_rate=np.float64(self.learning_rate_),
+            n_neighbors_fit=np.int32(self.n_neighbors_),
+            params_json=np.array(json.dumps(params)),
+        )
+        g = getattr(self, "neighbor_graph_", None)
+        if g is not None:
+            arrays.update(
+                graph_p_cols=np.asarray(g.p_cols, np.int32),
+                graph_p_vals=np.asarray(g.p_vals, np.float32),
+                graph_edge_src=np.asarray(g.edge_src, np.int32),
+                graph_edge_dst=np.asarray(g.edge_dst, np.int32),
+                graph_edge_w=np.asarray(g.edge_w, np.float32),
+                graph_p_logp=np.float64(g.p_logp),
+                graph_has_edges=np.bool_(g.has_edges),
+            )
+        np.savez_compressed(path, **arrays)
+
+    @classmethod
+    def load(cls, path) -> "TSNE":
+        """Rebuild a fitted estimator persisted with :meth:`save`; the query
+        index is rebuilt lazily on the first ``transform``."""
+        z = np.load(path, allow_pickle=False)
+        if int(z["schema"]) != cls._SAVE_SCHEMA:
+            raise ValueError(
+                f"unsupported TSNE save schema {int(z['schema'])} "
+                f"(expected {cls._SAVE_SCHEMA})"
+            )
+        params = json.loads(str(z["params_json"]))
+        est = cls(**params)
+        est.embedding_ = np.asarray(z["embedding"])
+        est._x_fit = np.asarray(z["x_fit"])
+        est.kl_divergence_ = float(z["kl_divergence"])
+        est.kl_history_ = np.asarray(z["kl_history"])
+        est.n_iter_ = int(z["n_iter_run"])
+        est.learning_rate_ = float(z["learning_rate"])
+        est.n_neighbors_ = int(z["n_neighbors_fit"])
+        est.n_features_in_ = est._x_fit.shape[1]
+        est.timings_ = {}
+        est._query_index = None
+        if "graph_p_cols" in z.files:
+            est.neighbor_graph_ = NeighborGraph(
+                p_cols=z["graph_p_cols"], p_vals=z["graph_p_vals"],
+                edge_src=z["graph_edge_src"], edge_dst=z["graph_edge_dst"],
+                edge_w=z["graph_edge_w"], p_logp=float(z["graph_p_logp"]),
+                n=est._x_fit.shape[0], has_edges=bool(z["graph_has_edges"]),
+            )
+        else:
+            est.neighbor_graph_ = None
+        return est

@@ -123,6 +123,26 @@ def ell_impl(name: str):
         ) from None
 
 
+def attractive_forces_frozen(y: jax.Array, nbr_y: jax.Array, p: jax.Array):
+    """Attractive force of free points against *frozen* neighbor coordinates.
+
+    The out-of-sample kernel (FIt-SNE / t-SNE-CUDA style ``transform``):
+    each new point ``y [M, 2]`` descends toward its k nearest *fitted*
+    points, whose embedding coordinates ``nbr_y [M, K, 2]`` never move, with
+    row-normalized similarities ``p [M, K]`` (padding: 0).  Rows are fully
+    independent — no cross-point interaction — so the step is embarrassingly
+    data-parallel and batches of unrelated requests share one program.
+
+    Returns (force [M, 2], kl_attr [M] — per-point sum p log(1 + d²)).
+    """
+    diff = y[:, None, :] - nbr_y
+    d2 = jnp.sum(diff * diff, axis=-1)
+    pq = p / (1.0 + d2)
+    force = jnp.sum(pq[..., None] * diff, axis=1)
+    kl_attr = jnp.sum(p * jnp.log1p(d2), axis=1)
+    return force, kl_attr
+
+
 def attractive_forces_edges(y: jax.Array, src: jax.Array, dst: jax.Array, w: jax.Array):
     """Symmetric attractive force from the directed edge list.
 

@@ -86,3 +86,67 @@ def knn(
     best_d = best_d.reshape(-1, k)[:n]
     best_i = best_i.reshape(-1, k)[:n]
     return best_i, jnp.maximum(best_d, 0.0)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "block_q", "block_db", "pairwise_fn_name")
+)
+def knn_query(
+    q: jax.Array,
+    db: jax.Array,
+    k: int,
+    block_q: int = 512,
+    block_db: int = 2048,
+    pairwise_fn_name: str = "xla",
+):
+    """Exact KNN of query points against a fixed database (out-of-sample).
+
+    Unlike :func:`knn`, rows of ``q`` are *not* members of ``db``, so no
+    diagonal exclusion applies — the true nearest database point is a valid
+    answer.  Returns (idx [M,k] int32 into db, d2 [M,k]).
+    """
+    m = q.shape[0]
+    n = db.shape[0]
+    if k > n:
+        raise ValueError(f"k={k} must be <= database size n={n}")
+    if pairwise_fn_name == "pallas":
+        from repro.kernels.ops import pairwise_sq_dists as pw
+    else:
+        from repro.core._pairwise import pairwise_sq_dists as pw
+
+    dbp, _ = _pad_to(db, block_db, axis=0)
+    n_pad = dbp.shape[0]
+    sqn = jnp.sum(dbp * dbp, axis=1)
+    n_chunks = n_pad // block_db
+
+    qp, _ = _pad_to(q, block_q, axis=0)
+    q_sqn = jnp.sum(qp * qp, axis=1)
+    n_qblocks = qp.shape[0] // block_q
+    big = jnp.asarray(jnp.finfo(q.dtype).max, q.dtype)
+
+    def one_qblock(qb):
+        qq = jax.lax.dynamic_slice_in_dim(qp, qb * block_q, block_q)
+        qn = jax.lax.dynamic_slice_in_dim(q_sqn, qb * block_q, block_q)
+
+        def scan_chunk(carry, c):
+            best_d, best_i = carry
+            chunk = jax.lax.dynamic_slice_in_dim(dbp, c * block_db, block_db)
+            dbn = jax.lax.dynamic_slice_in_dim(sqn, c * block_db, block_db)
+            col = c * block_db + jnp.arange(block_db, dtype=jnp.int32)
+            d2 = pw(qq, chunk, qn, dbn)                   # [block_q, block_db]
+            d2 = jnp.where(col[None, :] >= n, big, d2)
+            cat_d = jnp.concatenate([best_d, d2], axis=1)
+            cat_i = jnp.concatenate(
+                [best_i, jnp.broadcast_to(col[None, :], d2.shape)], axis=1
+            )
+            neg_top, argtop = jax.lax.top_k(-cat_d, k)
+            return (-neg_top, jnp.take_along_axis(cat_i, argtop, axis=1)), None
+
+        init = (jnp.full((block_q, k), big, q.dtype),
+                jnp.full((block_q, k), -1, jnp.int32))
+        (best_d, best_i), _ = jax.lax.scan(scan_chunk, init, jnp.arange(n_chunks))
+        return best_d, best_i
+
+    best_d, best_i = jax.lax.map(one_qblock, jnp.arange(n_qblocks))
+    return (best_i.reshape(-1, k)[:m],
+            jnp.maximum(best_d.reshape(-1, k)[:m], 0.0))

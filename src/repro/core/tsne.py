@@ -255,6 +255,9 @@ class TsneResult(NamedTuple):
     kl_history: np.ndarray
     timings: dict
     n_iter: int = 0
+    # the fitted sparse-P pytree (kept so estimators can persist / reuse the
+    # neighbor structure without re-running KNN + perplexity search)
+    graph: "NeighborGraph | None" = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -412,4 +415,5 @@ def run_tsne(
         kl_history=np.asarray(kl_hist, np.float64) if kl_hist else np.zeros((0, 2)),
         timings=timings,
         n_iter=it + 1,
+        graph=graph,
     )

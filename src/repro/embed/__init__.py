@@ -1,0 +1,23 @@
+"""Out-of-sample embedding subsystem: ``TSNE.transform`` + serving loop.
+
+Two layers over a frozen fitted embedding:
+
+* :mod:`repro.embed.transform` — the attractive-only descent that places new
+  points among their k nearest *fitted* neighbors (one fixed-shape jitted
+  step; batch driver with padding + per-point early stop);
+* :mod:`repro.embed.service` — :class:`EmbeddingService`, the
+  continuous-batching slot loop (adapted from ``repro.serve.engine``) that
+  drains a queue of single-point transform requests against a per-dataset
+  cache of fitted models, with per-request latency/step stats.
+"""
+from repro.embed.transform import (
+    TransformConfig, TransformState, TransformStats, prepare_batch,
+    transform_batch, transform_step,
+)
+from repro.embed.service import EmbeddingService, TransformRequest
+
+__all__ = [
+    "TransformConfig", "TransformState", "TransformStats",
+    "prepare_batch", "transform_batch", "transform_step",
+    "EmbeddingService", "TransformRequest",
+]

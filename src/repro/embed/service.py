@@ -1,0 +1,269 @@
+"""Continuous-batching t-SNE embedding service.
+
+The vLLM-style slot loop from ``repro.serve.engine``, re-targeted from token
+decoding to out-of-sample embedding: a fixed pool of ``slots`` transform
+lanes steps through ONE jitted ``transform_step`` together; lanes whose
+point converged (gradient norm under tolerance, or the step cap) retire to
+``completed`` and are refilled from the request queue between steps.  Fitted
+models are cached per dataset name, so a single service instance serves
+concurrent transform traffic against many frozen embeddings — requests for
+different datasets share the same step program, because each lane carries
+its own frozen neighbor coordinates (gathered once at admission).
+
+    service = EmbeddingService(slots=8)
+    service.fit_dataset("digits", x_train, perplexity=12.0, n_iter=300)
+    for i, x in enumerate(x_new):
+        service.submit(TransformRequest(rid=i, dataset="digits", x=x))
+    done = service.run()
+    done[0].y, done[0].n_steps, done[0].latency_s
+
+Smoke entry point (CI):  PYTHONPATH=src python -m repro.embed.service --smoke
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.embed.transform import (
+    TransformConfig, TransformState, prepare_batch, transform_step,
+)
+
+
+@dataclasses.dataclass
+class TransformRequest:
+    """One new point to embed into a named frozen fit."""
+
+    rid: int
+    dataset: str
+    x: np.ndarray                      # [D] input-space coordinates
+    y: np.ndarray | None = None        # [2] result, set on completion
+    n_steps: int = 0                   # descent iterations consumed
+    grad_norm: float = float("nan")    # gradient norm at retirement
+    done: bool = False
+    submitted_at: float = 0.0
+    started_at: float = 0.0
+    finished_at: float = 0.0
+
+    @property
+    def latency_s(self) -> float:
+        """Wall time from submit to completion (queueing included)."""
+        return self.finished_at - self.submitted_at
+
+    @property
+    def service_s(self) -> float:
+        """Wall time from slot admission to completion."""
+        return self.finished_at - self.started_at
+
+
+class EmbeddingService:
+    """Fixed-slot continuous-batching server over cached fitted models.
+
+    ``max_k`` bounds the neighbor width across all served datasets; a
+    model fitted with more neighbors is truncated to its ``max_k`` nearest
+    at query time (similarities renormalized by the perplexity search), so
+    every lane fits the one compiled ``[slots, max_k]`` step.
+    """
+
+    def __init__(
+        self,
+        slots: int = 8,
+        max_k: int = 96,
+        config: TransformConfig = TransformConfig(),
+    ):
+        if slots < 1:
+            raise ValueError(f"slots={slots} must be >= 1")
+        self.slots = slots
+        self.max_k = max_k
+        self.config = config
+        self._models: dict[str, object] = {}       # name -> fitted TSNE
+        self.queue: deque[TransformRequest] = deque()
+        self.active: list[TransformRequest | None] = [None] * slots
+        self.completed: list[TransformRequest] = []
+        self._steps = np.zeros(slots, np.int32)
+        # pooled device-side state, [slots, ...] — one compile for the life
+        # of the service regardless of which datasets the lanes serve
+        self._state = TransformState(
+            y=jnp.zeros((slots, 2), jnp.float32),
+            velocity=jnp.zeros((slots, 2), jnp.float32),
+            gains=jnp.ones((slots, 2), jnp.float32),
+        )
+        self._p = jnp.zeros((slots, max_k), jnp.float32)
+        self._nbr_y = jnp.zeros((slots, max_k, 2), jnp.float32)
+        self.ticks = 0
+
+    # ------------------------------------------------------------ models --
+
+    def add_model(self, name: str, model) -> None:
+        """Cache a fitted :class:`~repro.api.estimator.TSNE` under ``name``."""
+        if not hasattr(model, "embedding_"):
+            raise ValueError(f"model {name!r} is not fitted")
+        self._models[name] = model
+
+    def fit_dataset(self, name: str, x, **tsne_kwargs):
+        """Fit a fresh estimator on ``x`` and cache it under ``name``."""
+        from repro.api.estimator import TSNE
+        model = TSNE(**tsne_kwargs).fit(x)
+        self.add_model(name, model)
+        return model
+
+    def load_model(self, name: str, path) -> None:
+        """Cache a model persisted with ``TSNE.save`` (cross-process cache)."""
+        from repro.api.estimator import TSNE
+        self.add_model(name, TSNE.load(path))
+
+    def models(self) -> tuple[str, ...]:
+        return tuple(sorted(self._models))
+
+    # ------------------------------------------------------------- queue --
+
+    def submit(self, req: TransformRequest) -> None:
+        if req.dataset not in self._models:
+            raise ValueError(
+                f"unknown dataset {req.dataset!r}; cached models: "
+                f"{', '.join(self.models()) or '(none)'}"
+            )
+        req.submitted_at = time.perf_counter()
+        self.queue.append(req)
+
+    def _admit(self, slot: int, req: TransformRequest) -> None:
+        """Query + perplexity search + init for one request, into ``slot``."""
+        model = self._models[req.dataset]
+        k = min(model.query_k_, self.max_k)
+        p, nbr_y, y0 = prepare_batch(
+            jnp.asarray(req.x, jnp.float32)[None], model.query_index_,
+            model.embedding_, k, model.perplexity,
+        )
+        p_row = np.zeros((self.max_k,), np.float32)
+        p_row[:k] = np.asarray(p[0])
+        nbr_row = np.zeros((self.max_k, 2), np.float32)
+        nbr_row[:k] = np.asarray(nbr_y[0])
+        self._p = self._p.at[slot].set(jnp.asarray(p_row))
+        self._nbr_y = self._nbr_y.at[slot].set(jnp.asarray(nbr_row))
+        self._state = TransformState(
+            y=self._state.y.at[slot].set(y0[0]),
+            velocity=self._state.velocity.at[slot].set(0.0),
+            gains=self._state.gains.at[slot].set(1.0),
+        )
+        self._steps[slot] = 0
+        req.started_at = time.perf_counter()
+        self.active[slot] = req
+
+    def _refill(self) -> None:
+        for s in range(self.slots):
+            if self.active[s] is None and self.queue:
+                self._admit(s, self.queue.popleft())
+
+    # -------------------------------------------------------------- loop --
+
+    def step(self) -> bool:
+        """One engine tick: refill empty lanes, advance every active lane by
+        one jitted descent step, retire converged/capped lanes.  Returns
+        False once the pool and queue are both empty."""
+        self._refill()
+        active_mask = np.array([r is not None for r in self.active])
+        if not active_mask.any():
+            return False
+        cfg = self.config
+        momentum = np.where(
+            self._steps < cfg.momentum_switch_iter,
+            cfg.momentum_initial, cfg.momentum_final,
+        ).astype(np.float32)
+        self._state, grad_norm, _ = transform_step(
+            self._state, self._p, self._nbr_y,
+            jnp.asarray(active_mask), jnp.asarray(momentum),
+            lr=cfg.learning_rate, min_gain=cfg.min_gain,
+        )
+        self.ticks += 1
+        gn = np.asarray(grad_norm)
+        y_now = None
+        for s, req in enumerate(self.active):
+            if req is None:
+                continue
+            self._steps[s] += 1
+            if gn[s] < cfg.min_grad_norm or self._steps[s] >= cfg.n_iter:
+                if y_now is None:
+                    y_now = np.asarray(self._state.y)
+                req.y = y_now[s].copy()
+                req.n_steps = int(self._steps[s])
+                req.grad_norm = float(gn[s])
+                req.done = True
+                req.finished_at = time.perf_counter()
+                self.completed.append(req)
+                self.active[s] = None
+        return True
+
+    def run(self, max_ticks: int = 100_000) -> list[TransformRequest]:
+        """Drain the queue; returns the requests completed by this call."""
+        n_done = len(self.completed)
+        ticks = 0
+        while (self.queue or any(r is not None for r in self.active)) \
+                and ticks < max_ticks:
+            self.step()
+            ticks += 1
+        return self.completed[n_done:]
+
+    # ------------------------------------------------------------- stats --
+
+    def stats(self) -> dict:
+        """Aggregate per-request latency / step-count statistics."""
+        done = self.completed
+        if not done:
+            return dict(completed=0, ticks=self.ticks)
+        lat = np.array([r.latency_s for r in done])
+        steps = np.array([r.n_steps for r in done])
+        return dict(
+            completed=len(done),
+            ticks=self.ticks,
+            queued=len(self.queue),
+            datasets=sorted({r.dataset for r in done}),
+            latency_s_mean=float(lat.mean()),
+            latency_s_p50=float(np.percentile(lat, 50)),
+            latency_s_max=float(lat.max()),
+            steps_mean=float(steps.mean()),
+            steps_max=int(steps.max()),
+        )
+
+
+def _smoke() -> None:
+    """CI smoke: fit a small dataset, push requests through the queue."""
+    from repro.data.datasets import make_dataset
+
+    x, _ = make_dataset("digits", n=480)
+    train, new = x[:400], x[400:432]
+    service = EmbeddingService(slots=4, max_k=48)
+    service.fit_dataset(
+        "digits", train, perplexity=10.0, n_iter=150, kl_every=75,
+        random_state=0,
+    )
+    for i, xi in enumerate(new):
+        service.submit(TransformRequest(rid=i, dataset="digits", x=xi))
+    t0 = time.perf_counter()
+    done = service.run()
+    wall = time.perf_counter() - t0
+    assert len(done) == len(new), f"{len(done)}/{len(new)} completed"
+    assert all(r.done and r.y is not None and np.isfinite(r.y).all()
+               for r in done)
+    s = service.stats()
+    print(
+        f"embedding-service smoke OK: {s['completed']} requests through "
+        f"{service.slots} slots in {wall:.1f}s ({s['ticks']} ticks, "
+        f"mean {s['steps_mean']:.0f} steps, "
+        f"p50 latency {s['latency_s_p50'] * 1e3:.0f}ms)"
+    )
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="fit a small dataset and drain a short queue (CI)")
+    args = ap.parse_args()
+    if args.smoke:
+        _smoke()
+    else:
+        ap.error("this module is a library; run with --smoke for the CI check")

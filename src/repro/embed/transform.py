@@ -1,0 +1,186 @@
+"""Out-of-sample t-SNE ``transform``: descend new points into a frozen fit.
+
+The parametric-free extension FIt-SNE and UMAP deployments use: the fitted
+embedding is a frozen reference; each new point finds its k nearest *fitted*
+input points (through the neighbor backend's query index), gets
+perplexity-calibrated similarities over exactly those k rows, and runs
+attractive-only gradient descent against their — never-moving — embedding
+coordinates.  No refit, no repulsion, no interaction between new points.
+
+Everything funnels through ONE jitted step, :func:`transform_step`, whose
+shapes are ``[B, K]`` with B and K fixed per caller:
+
+* :func:`transform_batch` pads request batches to ``TransformConfig.
+  batch_size`` rows, so arbitrary batch sizes reuse a single trace;
+* the :class:`~repro.embed.service.EmbeddingService` calls the same step
+  over its ``[slots, max_k]`` pool, refilling finished slots between steps.
+
+``momentum`` is a traced operand (scalar for whole-batch schedules, ``[B]``
+for the service's per-slot schedules), so schedule switches never retrace.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bsp
+from repro.core.attractive import attractive_forces_frozen
+
+# trace-time side effect: appended to once per (shape, static-arg) compile of
+# transform_step — tests assert it does NOT grow across different batch
+# payloads, i.e. the fixed-shape step really is traced once
+TRACE_LOG: list[tuple] = []
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformConfig:
+    """Knobs of the attractive-only descent (defaults match FIt-SNE's
+    late-phase optimizer scaled to per-row-normalized similarities)."""
+
+    n_iter: int = 120                 # max descent iterations per point
+    learning_rate: float = 0.5
+    momentum_initial: float = 0.5
+    momentum_final: float = 0.8
+    momentum_switch_iter: int = 30
+    min_gain: float = 0.01
+    min_grad_norm: float = 1e-5       # per-point convergence threshold
+    check_every: int = 10             # host-side convergence-check period
+    batch_size: int = 128             # fixed jit batch width for transform()
+    perplexity: float | None = None   # None = the fitted model's perplexity
+
+
+class TransformState(NamedTuple):
+    """Per-point descent state (all rows independent)."""
+    y: jax.Array          # [B, 2] current coordinates
+    velocity: jax.Array   # [B, 2]
+    gains: jax.Array      # [B, 2]
+
+
+class TransformStats(NamedTuple):
+    """Per-point outcome of a transform batch (host-side numpy)."""
+    n_steps: np.ndarray       # iterations until convergence (or n_iter cap)
+    grad_norm: np.ndarray     # final per-point gradient norm
+    kl_attr: np.ndarray       # final per-point sum p log(1 + d²)
+
+
+@functools.partial(jax.jit, static_argnames=("lr", "min_gain"))
+def transform_step(
+    state: TransformState,
+    p: jax.Array,           # [B, K] row-normalized similarities (pad rows: 0)
+    nbr_y: jax.Array,       # [B, K, 2] frozen fitted coordinates
+    active: jax.Array,      # [B] bool — frozen rows keep their coordinates
+    momentum,               # scalar or [B]
+    *,
+    lr: float,
+    min_gain: float,
+):
+    """One attractive-only descent step; returns (state, grad_norm [B],
+    kl_attr [B]).  Same momentum/gains rule as the full optimizer."""
+    TRACE_LOG.append((state.y.shape, p.shape, lr, min_gain))
+    force, kl_attr = attractive_forces_frozen(state.y, nbr_y, p)
+    grad = 4.0 * force
+    grad_norm = jnp.linalg.norm(grad, axis=1)
+    same_sign = (grad > 0) == (state.velocity > 0)
+    gains = jnp.where(same_sign, state.gains * 0.8, state.gains + 0.2)
+    gains = jnp.maximum(gains, min_gain)
+    mom = jnp.asarray(momentum, state.y.dtype)
+    velocity = mom[..., None] * state.velocity - lr * gains * grad
+    y = jnp.where(active[:, None], state.y + velocity, state.y)
+    return TransformState(y=y, velocity=velocity, gains=gains), grad_norm, kl_attr
+
+
+def prepare_batch(
+    x_new: jax.Array,
+    index,                     # NeighborIndex over the fitted inputs
+    y_ref: jax.Array,          # [N, 2] frozen fitted embedding
+    k: int,
+    perplexity: float,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Admission path: query + perplexity search + neighbor-weighted init.
+
+    Returns ``(p [M, k], nbr_y [M, k, 2], y0 [M, 2])``.  ``y0`` is the
+    p-weighted mean of the fitted neighbor coordinates — already inside the
+    right cluster, so the descent only fine-tunes.
+    """
+    idx, d2 = index.query(x_new, k)
+    # perplexity can't exceed the support size: k rows bound entropy at log k
+    eff_perp = min(float(perplexity), max(1.0, 0.5 * k))
+    p, _ = bsp.binary_search_perplexity(d2, eff_perp)
+    nbr_y = jnp.asarray(y_ref)[idx]
+    y0 = jnp.einsum("mk,mkc->mc", p, nbr_y)
+    return p, nbr_y, y0
+
+
+def transform_batch(
+    x_new,
+    index,
+    y_ref,
+    *,
+    k: int,
+    perplexity: float,
+    config: TransformConfig = TransformConfig(),
+) -> tuple[np.ndarray, TransformStats]:
+    """Embed ``x_new [M, D]`` into the frozen fit; M is arbitrary.
+
+    Chunks of ``config.batch_size`` rows (zero-padded) run through the single
+    jitted :func:`transform_step`; each chunk stops early once every live
+    point's gradient norm drops under ``min_grad_norm`` (checked every
+    ``check_every`` iterations, like the full loop's convergence rule).
+    """
+    x_new = jnp.asarray(x_new)
+    m = int(x_new.shape[0])
+    bs = config.batch_size
+    out_y = np.zeros((m, 2), np.float32)
+    out_steps = np.zeros(m, np.int32)
+    out_gn = np.zeros(m, np.float32)
+    out_kl = np.zeros(m, np.float32)
+
+    for lo in range(0, m, bs):
+        chunk = x_new[lo:lo + bs]
+        c = int(chunk.shape[0])
+        pad = bs - c
+        p, nbr_y, y0 = prepare_batch(chunk, index, y_ref, k, perplexity)
+        if pad:
+            p = jnp.pad(p, ((0, pad), (0, 0)))
+            nbr_y = jnp.pad(nbr_y, ((0, pad), (0, 0), (0, 0)))
+            y0 = jnp.pad(y0, ((0, pad), (0, 0)))
+        state = TransformState(
+            y=y0, velocity=jnp.zeros_like(y0), gains=jnp.ones_like(y0)
+        )
+        valid = np.arange(bs) < c
+        active_h = valid.copy()
+        steps = np.zeros(bs, np.int32)
+        gn_h = np.zeros(bs, np.float32)
+        kl_h = np.zeros(bs, np.float32)
+        it = 0
+        for it in range(config.n_iter):
+            mom = config.momentum_initial if it < config.momentum_switch_iter \
+                else config.momentum_final
+            state, gn, kl_attr = transform_step(
+                state, p, nbr_y, jnp.asarray(active_h),
+                jnp.asarray(mom, jnp.float32),
+                lr=config.learning_rate, min_gain=config.min_gain,
+            )
+            if (it + 1) % config.check_every == 0 or it == config.n_iter - 1:
+                gn_np = np.asarray(gn)
+                kl_np = np.asarray(kl_attr)
+                newly = active_h & (gn_np < config.min_grad_norm)
+                steps[newly] = it + 1
+                gn_h[active_h] = gn_np[active_h]
+                kl_h[active_h] = kl_np[active_h]
+                active_h = active_h & ~newly
+                if not active_h.any():
+                    break
+        steps[active_h] = it + 1
+        out_y[lo:lo + c] = np.asarray(state.y)[:c]
+        out_steps[lo:lo + c] = steps[:c]
+        out_gn[lo:lo + c] = gn_h[:c]
+        out_kl[lo:lo + c] = kl_h[:c]
+
+    return out_y, TransformStats(n_steps=out_steps, grad_norm=out_gn,
+                                 kl_attr=out_kl)

@@ -9,20 +9,25 @@ Backends ("exact" | "rp_forest" | "nn_descent", or your own via
 ``method=``.
 """
 from repro.neighbors.base import (
-    NeighborBackend, available_neighbor_backends, make_neighbor_backend,
-    recall_at_k, register_neighbor_backend, unregister_neighbor_backend,
-    validate_k,
+    NeighborBackend, NeighborIndex, available_neighbor_backends,
+    build_query_index, make_neighbor_backend, recall_at_k,
+    register_neighbor_backend, unregister_neighbor_backend, validate_k,
+    validate_query_k,
 )
-from repro.neighbors.exact import ExactNeighbors
-from repro.neighbors.rp_forest import RPForestNeighbors, rp_forest_knn
+from repro.neighbors.exact import ExactIndex, ExactNeighbors
+from repro.neighbors.rp_forest import (
+    RPForestIndex, RPForestNeighbors, forest_query, rp_forest_knn,
+)
 from repro.neighbors.nn_descent import NNDescentNeighbors, nn_descent_knn
 from repro.neighbors._candidates import merge_topk, seed_graph
 
 __all__ = [
-    "NeighborBackend",
+    "NeighborBackend", "NeighborIndex",
     "ExactNeighbors", "RPForestNeighbors", "NNDescentNeighbors",
+    "ExactIndex", "RPForestIndex",
     "register_neighbor_backend", "unregister_neighbor_backend",
     "available_neighbor_backends", "make_neighbor_backend", "validate_k",
-    "recall_at_k", "rp_forest_knn", "nn_descent_knn", "merge_topk",
-    "seed_graph",
+    "validate_query_k", "build_query_index",
+    "recall_at_k", "rp_forest_knn", "nn_descent_knn", "forest_query",
+    "merge_topk", "seed_graph",
 ]

@@ -25,6 +25,7 @@ def merge_topk(
     cand_d: jax.Array,
     k: int,
     n: int,
+    exclude_self: bool = True,
 ) -> tuple[jax.Array, jax.Array]:
     """Fold candidate columns into a running top-k, row by row.
 
@@ -32,12 +33,18 @@ def merge_topk(
     index outside ``[0, n)`` or equal to the row index are dropped, and
     duplicate indices keep a single copy.  Returns ``(idx [N, k], d2 [N, k])``
     sorted ascending by distance.
+
+    ``exclude_self=False`` skips the row-index drop — the query path, where
+    rows are *new* points and candidate index ``i`` in row ``i`` is a
+    coincidence, not a self-edge.
     """
     ci = jnp.concatenate([best_i, cand_i], axis=1).astype(jnp.int32)
     cd = jnp.concatenate([best_d, cand_d], axis=1)
     big = _big(cd.dtype)
-    rows = jnp.arange(ci.shape[0], dtype=jnp.int32)[:, None]
-    invalid = (ci < 0) | (ci >= n) | (ci == rows)
+    invalid = (ci < 0) | (ci >= n)
+    if exclude_self:
+        rows = jnp.arange(ci.shape[0], dtype=jnp.int32)[:, None]
+        invalid = invalid | (ci == rows)
     cd = jnp.where(invalid, big, cd)
     # sort columns by index so duplicates become adjacent, then mask repeats
     order = jnp.argsort(ci, axis=1)
@@ -52,20 +59,25 @@ def merge_topk(
 
 
 def candidate_sq_dists(
-    x: jax.Array, cand: jax.Array, block_rows: int = 512
+    x: jax.Array, cand: jax.Array, block_rows: int = 512,
+    q: jax.Array | None = None,
 ) -> jax.Array:
-    """``d2[i, j] = ||x[i] - x[cand[i, j]]||²``, computed in row blocks.
+    """``d2[i, j] = ||row_i - x[cand[i, j]]||²``, computed in row blocks.
 
+    Rows come from ``q`` when given (out-of-sample queries scored against the
+    reference set ``x``), else from ``x`` itself (the self-KNN build path).
     ``cand`` entries are clipped to ``[0, n)`` for the gather; callers mask
     out-of-range columns themselves (merge_topk does).  Row blocking bounds
     the ``[B, C, D]`` gather transient instead of materializing ``[N, C, D]``.
     """
     n, _ = x.shape
+    rows = x if q is None else q
+    m = rows.shape[0]
     sqn = jnp.sum(x * x, axis=1)
     cand = jnp.clip(cand, 0, n - 1).astype(jnp.int32)
 
-    pad = (-n) % block_rows
-    xp = jnp.pad(x, ((0, pad), (0, 0)))
+    pad = (-m) % block_rows
+    xp = jnp.pad(rows, ((0, pad), (0, 0)))
     candp = jnp.pad(cand, ((0, pad), (0, 0)))
     n_blocks = xp.shape[0] // block_rows
 
@@ -78,7 +90,7 @@ def candidate_sq_dists(
         return jnp.maximum(d2, 0.0)
 
     d2 = lax.map(one_block, jnp.arange(n_blocks))
-    return d2.reshape(-1, cand.shape[1])[:n]
+    return d2.reshape(-1, cand.shape[1])[:m]
 
 
 @functools.partial(jax.jit, static_argnames=("k", "block_rows"))

@@ -37,12 +37,59 @@ class NeighborBackend(Protocol):
     d2 [N, k])`` — each row lists k distinct neighbors of the row point
     (self excluded) with their squared euclidean distances.  Approximate
     backends may return non-optimal neighbors, never invalid indices.
+
+    Backends that support out-of-sample queries additionally implement
+    ``build_index(x) -> NeighborIndex`` (see :func:`build_query_index` for
+    the registry-level entry point with an exact fallback).
     """
 
     name: str
 
     def neighbors(self, x: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:
         ...
+
+
+@runtime_checkable
+class NeighborIndex(Protocol):
+    """A fitted reference set that answers out-of-sample KNN queries.
+
+    ``query(x_new, k)`` maps query points ``x_new [M, D]`` (NOT members of
+    the reference set) to ``(idx [M, k] int32, d2 [M, k])`` — reference-set
+    indices of the k nearest fitted points per query, ascending by distance,
+    with exact squared distances for the selected candidates.  There is no
+    self-exclusion: the true nearest reference point is always a valid
+    answer.  ``n_reference`` is the fitted set size.
+    """
+
+    n_reference: int
+
+    def query(self, x_new: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:
+        ...
+
+
+def build_query_index(backend: NeighborBackend, x: jax.Array) -> NeighborIndex:
+    """Fit ``backend``'s query index over reference points ``x``.
+
+    Backends without a ``build_index`` method (e.g. custom registrations, or
+    ``nn_descent`` whose neighbor-of-neighbor refinement has no meaningful
+    frozen query structure) fall back to the exact blocked brute force —
+    always correct, O(M·N·D) per query batch.
+    """
+    builder = getattr(backend, "build_index", None)
+    if builder is not None:
+        return builder(x)
+    from repro.neighbors.exact import ExactNeighbors  # lazy: exact builds on base
+    return ExactNeighbors().build_index(x)
+
+
+def validate_query_k(n_reference: int, k: int) -> None:
+    """Query (n, k) precondition: 1 <= k <= reference-set size."""
+    if k < 1:
+        raise ValueError(f"k={k} must be >= 1")
+    if k > n_reference:
+        raise ValueError(
+            f"k={k} must be <= reference-set size n={n_reference}"
+        )
 
 
 def recall_at_k(ref_idx, idx) -> float:

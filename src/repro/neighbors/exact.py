@@ -2,7 +2,9 @@
 
 O(N²·D), but every distance is evaluated on the MXU (Pallas or XLA pairwise
 tiles), so it is the right default up to ~50k points and the recall oracle
-for the approximate backends at any size.
+for the approximate backends at any size.  The query index is the same
+blocked scan with query rows swapped in for the database rows — recall 1.0
+for out-of-sample points too.
 """
 from __future__ import annotations
 
@@ -10,9 +12,34 @@ import dataclasses
 from typing import ClassVar
 
 import jax
+import jax.numpy as jnp
 
-from repro.core.knn import knn
-from repro.neighbors.base import register_neighbor_backend, validate_k
+from repro.core.knn import knn, knn_query
+from repro.neighbors.base import (
+    register_neighbor_backend, validate_k, validate_query_k,
+)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class ExactIndex:
+    """Brute-force query index: holds the reference points verbatim."""
+
+    x_ref: jax.Array
+    block_q: int = 512
+    block_db: int = 2048
+    pairwise: str = "xla"
+
+    @property
+    def n_reference(self) -> int:
+        return int(self.x_ref.shape[0])
+
+    def query(self, x_new: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:
+        validate_query_k(self.n_reference, k)
+        return knn_query(
+            x_new.astype(self.x_ref.dtype), self.x_ref, k,
+            block_q=self.block_q, block_db=self.block_db,
+            pairwise_fn_name=self.pairwise,
+        )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -30,6 +57,13 @@ class ExactNeighbors:
             x, k,
             block_q=self.block_q, block_db=self.block_db,
             pairwise_fn_name=self.pairwise,
+        )
+
+    def build_index(self, x: jax.Array) -> ExactIndex:
+        return ExactIndex(
+            x_ref=jnp.asarray(x),
+            block_q=self.block_q, block_db=self.block_db,
+            pairwise=self.pairwise,
         )
 
 

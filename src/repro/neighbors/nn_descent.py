@@ -94,5 +94,12 @@ class NNDescentNeighbors:
             block_rows=self.block_rows,
         )
 
+    def build_index(self, x: jax.Array):
+        """Out-of-sample queries fall back to the exact blocked scan: the
+        neighbor-of-neighbor refinement leaves no frozen routing structure
+        a new point could descend (unlike the forest's hyperplanes)."""
+        from repro.neighbors.exact import ExactNeighbors
+        return ExactNeighbors(block_db=self.block_rows * 4).build_index(x)
+
 
 register_neighbor_backend("nn_descent", NNDescentNeighbors)

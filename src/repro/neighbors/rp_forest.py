@@ -8,6 +8,11 @@ and matmuls, fully jittable with static shapes.  Leaves then hold
 and keep the top-k, and the per-tree graphs are merged with duplicate
 dropping.  Recall grows with ``n_trees`` and ``leaf_size``; an optional
 ``refine_iters`` polish runs NN-descent over the forest output.
+
+The same forest doubles as an out-of-sample query index: the build records
+each level's median split threshold, so a new point routes down every tree
+(project, compare, descend — ``depth`` dot products per tree) to a leaf
+whose members are scored exactly and merged across trees.
 """
 from __future__ import annotations
 
@@ -20,32 +25,47 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.neighbors._candidates import merge_topk, seed_graph
-from repro.neighbors.base import register_neighbor_backend, validate_k
+from repro.neighbors._candidates import (
+    candidate_sq_dists, merge_topk, seed_graph,
+)
+from repro.neighbors.base import (
+    register_neighbor_backend, validate_k, validate_query_k,
+)
 
 
 @functools.partial(jax.jit, static_argnames=("depth", "n_pad"))
-def _build_tree_leaves(
+def _build_tree(
     x: jax.Array, key: jax.Array, depth: int, n_pad: int
-) -> jax.Array:
-    """One tree: [2^depth, leaf_size] point indices (pads hold idx >= N).
+) -> tuple[jax.Array, jax.Array, tuple[jax.Array, ...]]:
+    """One tree: leaf membership + the structure needed to route queries.
 
     Level ``l`` sorts each of the 2^l equal-length segments by the points'
     projection onto that level's random direction; halving sorted segments
     is exactly a median split, so the tree stays perfectly balanced.  Pads
     project to +inf and sink to the high side of every split.
+
+    Returns ``(leaves [2^depth, leaf_size] point indices (pads hold
+    idx >= N), dirs [depth, D] hyperplane directions, thrs)`` where
+    ``thrs[l] [2^l]`` is the split value of each level-``l`` node — the
+    midpoint of the two projections straddling the median, so a query goes
+    right iff its projection exceeds it.
     """
     n, d = x.shape
-    dirs = jax.random.normal(key, (depth, d), x.dtype) if depth else None
+    dirs = jax.random.normal(key, (depth, d), x.dtype)
     proj = x @ dirs.T if depth else None             # [N, depth]
     order = jnp.arange(n_pad, dtype=jnp.int32)
     big = jnp.asarray(jnp.finfo(x.dtype).max, x.dtype)
     pos = jnp.arange(n_pad, dtype=jnp.int32)
+    thrs = []
     for level in range(depth):
-        seg = pos // (n_pad >> level)
+        seg_len = n_pad >> level
+        seg = pos // seg_len
         p = jnp.where(order < n, proj[jnp.clip(order, 0, n - 1), level], big)
-        _, _, order = lax.sort((seg, p, order), num_keys=2)
-    return order.reshape(1 << depth, n_pad >> depth)
+        _, p_s, order = lax.sort((seg, p, order), num_keys=2)
+        half = seg_len >> 1
+        p2 = p_s.reshape(1 << level, seg_len)
+        thrs.append(0.5 * (p2[:, half - 1] + p2[:, half]))
+    return order.reshape(1 << depth, n_pad >> depth), dirs, tuple(thrs)
 
 
 @functools.partial(jax.jit, static_argnames=("k", "n_pad"))
@@ -104,7 +124,7 @@ def rp_forest_knn(
     # dedup/top-k merge beats n_trees narrow ones (the sort dominates)
     cand_i, cand_d = [], []
     for t in range(n_trees):
-        leaves = _build_tree_leaves(x, jax.random.fold_in(key, t), depth, n_pad)
+        leaves, _, _ = _build_tree(x, jax.random.fold_in(key, t), depth, n_pad)
         ti, td = _leaf_topk(x, leaves, k, n_pad)
         cand_i.append(ti[:n])
         cand_d.append(td[:n])
@@ -113,6 +133,87 @@ def rp_forest_knn(
         jnp.concatenate(cand_i, axis=1), jnp.concatenate(cand_d, axis=1),
         k, n,
     )
+
+
+@functools.partial(jax.jit, static_argnames=("n_trees", "depth", "n_pad"))
+def build_forest_index(
+    x: jax.Array, n_trees: int, depth: int, n_pad: int, seed: int = 0
+):
+    """Stack every tree's routing structure: the frozen query-side forest.
+
+    Returns ``(leaves [T, 2^depth, leaf_size], dirs [T, depth, D],
+    thrs)`` with ``thrs[l] [T, 2^l]`` — the same trees (same PRNG folds)
+    ``rp_forest_knn`` builds, so queries descend the forest the fitted
+    points were bucketed by.
+    """
+    key = jax.random.PRNGKey(seed)
+    leaves, dirs, thrs = [], [], []
+    for t in range(n_trees):
+        lv, dr, th = _build_tree(x, jax.random.fold_in(key, t), depth, n_pad)
+        leaves.append(lv)
+        dirs.append(dr)
+        thrs.append(th)
+    return (
+        jnp.stack(leaves),
+        jnp.stack(dirs),
+        tuple(jnp.stack([th[l] for th in thrs]) for l in range(depth)),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_rows"))
+def forest_query(
+    x_ref: jax.Array,
+    leaves: jax.Array,
+    dirs: jax.Array,
+    thrs: tuple[jax.Array, ...],
+    q: jax.Array,
+    k: int,
+    block_rows: int = 512,
+) -> tuple[jax.Array, jax.Array]:
+    """Route queries down every tree, score leaf members exactly, merge.
+
+    q [M, D] -> (idx [M, k] into x_ref, d2 [M, k]).  A deterministic seed
+    row (the first k reference points, scored exactly) guarantees k valid
+    distinct indices even if the forest candidates collapse to duplicates.
+    """
+    n = x_ref.shape[0]
+    n_trees, _, leaf_size = leaves.shape
+    depth = dirs.shape[1]
+    m = q.shape[0]
+    tree_ids = jnp.arange(n_trees, dtype=jnp.int32)[None, :]      # [1, T]
+    node = jnp.zeros((m, n_trees), jnp.int32)
+    if depth:
+        proj = jnp.einsum("md,tld->mtl", q, dirs)                 # [M, T, depth]
+        for level in range(depth):
+            thr = thrs[level][tree_ids, node]                     # [M, T]
+            node = node * 2 + (proj[:, :, level] > thr).astype(jnp.int32)
+    cand = leaves[tree_ids, node].reshape(m, n_trees * leaf_size)
+    cd = candidate_sq_dists(x_ref, cand, block_rows=block_rows, q=q)
+    base_i = jnp.broadcast_to(jnp.arange(k, dtype=jnp.int32)[None], (m, k))
+    base_d = candidate_sq_dists(x_ref, base_i, block_rows=block_rows, q=q)
+    return merge_topk(base_i, base_d, cand, cd, k, n, exclude_self=False)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class RPForestIndex:
+    """Frozen RP forest over a fitted reference set, ready for queries."""
+
+    x_ref: jax.Array
+    leaves: jax.Array                      # [T, 2^depth, leaf_size]
+    dirs: jax.Array                        # [T, depth, D]
+    thrs: tuple[jax.Array, ...]            # level l: [T, 2^l]
+    block_rows: int = 512
+
+    @property
+    def n_reference(self) -> int:
+        return int(self.x_ref.shape[0])
+
+    def query(self, x_new: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:
+        validate_query_k(self.n_reference, k)
+        return forest_query(
+            self.x_ref, self.leaves, self.dirs, self.thrs,
+            x_new.astype(self.x_ref.dtype), k, block_rows=self.block_rows,
+        )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -151,6 +252,26 @@ class RPForestNeighbors:
                 seed=self.seed + 1, block_rows=self.block_rows,
             )
         return idx, d2
+
+    def build_index(self, x: jax.Array) -> RPForestIndex:
+        """Build (once) the forest a fitted reference set is bucketed by.
+
+        Depth matches the ``neighbors`` heuristic with ``k = leaf_size - 1``
+        so leaves keep >= ``leaf_size`` points regardless of later query k;
+        ``validate_query_k`` bounds k at query time.
+        """
+        x = jnp.asarray(x)
+        n = int(x.shape[0])
+        depth = self.resolve_depth(n, max(1, min(self.leaf_size, n) - 1))
+        leaf = -(-n // (1 << depth))
+        n_pad = leaf << depth
+        leaves, dirs, thrs = build_forest_index(
+            x, self.n_trees, depth, n_pad, seed=self.seed
+        )
+        return RPForestIndex(
+            x_ref=x, leaves=leaves, dirs=dirs, thrs=thrs,
+            block_rows=self.block_rows,
+        )
 
 
 register_neighbor_backend("rp_forest", RPForestNeighbors)

@@ -28,8 +28,10 @@ class Request:
 
 class ServeEngine:
     def __init__(self, model, batch_slots: int = 4, max_seq: int = 128,
-                 eos_id: int | None = None, greedy: bool = True, seed: int = 0):
+                 eos_id: int | None = None, greedy: bool = True, seed: int = 0,
+                 params: Any | None = None):
         self.model = model
+        self.model_params = params
         self.slots = batch_slots
         self.max_seq = max_seq
         self.eos_id = eos_id
@@ -59,6 +61,11 @@ class ServeEngine:
 
     def step(self):
         """One engine tick: decode_step over all slots, then bookkeeping."""
+        if self.model_params is None:
+            raise RuntimeError(
+                "no model params — pass params= to ServeEngine(...) or call "
+                "run(params) instead of stepping directly"
+            )
         self._refill()
         if all(a is None for a in self.active):
             return False
@@ -86,8 +93,9 @@ class ServeEngine:
                 self.active[s] = None
         return True
 
-    def run(self, params, max_ticks: int = 10_000):
-        self.model_params = params
+    def run(self, params: Any | None = None, max_ticks: int = 10_000):
+        if params is not None:
+            self.model_params = params
         ticks = 0
         while (self.queue or any(a is not None for a in self.active)) and ticks < max_ticks:
             self.step()

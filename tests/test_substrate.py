@@ -166,6 +166,26 @@ class TestServeEngine:
             assert len(req.generated) == 4
             assert all(0 <= t < cfg.vocab_size for t in req.generated)
 
+    def test_step_directly_after_construction(self):
+        # regression: model_params used to be assigned only inside run(), so
+        # step() on a fresh engine raised AttributeError
+        cfg = get_reduced_config("deepseek_7b")
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        eng = ServeEngine(model, batch_slots=2, max_seq=32, params=params)
+        eng.submit(Request(rid=0, prompt=[1, 2], max_new_tokens=2))
+        assert eng.step() is True
+        done = eng.run()                    # params already bound at init
+        assert len(done) == 1 and len(done[0].generated) == 2
+
+    def test_step_without_params_raises(self):
+        cfg = get_reduced_config("deepseek_7b")
+        model = build_model(cfg)
+        eng = ServeEngine(model, batch_slots=1, max_seq=32)
+        eng.submit(Request(rid=0, prompt=[1], max_new_tokens=1))
+        with pytest.raises(RuntimeError, match="no model params"):
+            eng.step()
+
     def test_greedy_decode_is_deterministic(self):
         cfg = get_reduced_config("rwkv6_3b")
         model = build_model(cfg)

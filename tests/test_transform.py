@@ -1,0 +1,265 @@
+"""Out-of-sample subsystem: neighbor query indexes, TSNE.transform,
+fitted-state persistence, and the continuous-batching EmbeddingService."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.api import TSNE, EmbeddingService, TransformConfig, TransformRequest
+from repro.data.datasets import make_dataset
+from repro.embed.transform import TRACE_LOG, transform_batch
+from repro.neighbors import (
+    ExactNeighbors, NNDescentNeighbors, RPForestNeighbors, build_query_index,
+    recall_at_k,
+)
+
+
+@pytest.fixture(scope="module")
+def digits_split():
+    """Train/held-out split of the digits-scale planted-cluster data."""
+    x, labels = make_dataset("digits", n=700)
+    return (x[:600], labels[:600]), (x[600:], labels[600:])
+
+
+@pytest.fixture(scope="module")
+def fitted(digits_split):
+    """One fitted estimator shared by the transform/service tests."""
+    (train_x, _), _ = digits_split
+    est = TSNE(perplexity=12.0, n_iter=250, kl_every=125, random_state=0)
+    est.fit(train_x)
+    return est
+
+
+@pytest.fixture(scope="module")
+def query_oracle():
+    """Reference set + new points + exact query answer (numpy oracle)."""
+    x, _ = make_dataset("digits")
+    ref, new = x[:1500], x[1500:1700]
+    d2 = ((new[:, None, :] - ref[None]) ** 2).sum(-1)
+    ref_idx = np.argsort(d2, axis=1)[:, :15]
+    return jnp.asarray(ref), jnp.asarray(new), ref_idx, d2
+
+
+# ------------------------------------------------------------- query() ------
+class TestQueryIndex:
+    def test_exact_query_matches_oracle(self, query_oracle):
+        ref, new, ref_idx, d2 = query_oracle
+        idx, qd2 = ExactNeighbors().build_index(ref).query(new, 15)
+        assert recall_at_k(ref_idx, np.asarray(idx)) == 1.0
+        np.testing.assert_allclose(
+            np.asarray(qd2), np.take_along_axis(d2, np.asarray(idx), 1),
+            rtol=1e-3, atol=1e-2,
+        )
+
+    def test_rp_forest_query_recall(self, query_oracle):
+        # satellite acceptance: forest query recall >= 0.9 vs exact
+        ref, new, ref_idx, d2 = query_oracle
+        index = RPForestNeighbors().build_index(ref)
+        idx, qd2 = index.query(new, 15)
+        idx = np.asarray(idx)
+        assert recall_at_k(ref_idx, idx) >= 0.9
+        # indices valid + distinct, distances exact for the selected
+        assert ((idx >= 0) & (idx < index.n_reference)).all()
+        srt = np.sort(idx, axis=1)
+        assert not (srt[:, 1:] == srt[:, :-1]).any()
+        np.testing.assert_allclose(
+            np.asarray(qd2), np.take_along_axis(d2, idx, 1),
+            rtol=1e-3, atol=1e-2,
+        )
+
+    def test_nn_descent_falls_back_to_exact(self, query_oracle):
+        ref, new, ref_idx, _ = query_oracle
+        index = build_query_index(NNDescentNeighbors(), ref)
+        idx, _ = index.query(new, 15)
+        assert recall_at_k(ref_idx, np.asarray(idx)) == 1.0
+
+    def test_fallback_for_backend_without_index(self, query_oracle):
+        class Bare:
+            name = "bare"
+            def neighbors(self, x, k):
+                raise NotImplementedError
+
+        ref, new, ref_idx, _ = query_oracle
+        idx, _ = build_query_index(Bare(), ref).query(new, 15)
+        assert recall_at_k(ref_idx, np.asarray(idx)) == 1.0
+
+    def test_query_k_validation(self, query_oracle):
+        ref, new, _, _ = query_oracle
+        index = ExactNeighbors().build_index(ref[:10])
+        with pytest.raises(ValueError, match="must be >= 1"):
+            index.query(new, 0)
+        with pytest.raises(ValueError, match="reference-set size"):
+            index.query(new, 11)
+
+
+# ----------------------------------------------------------- transform ------
+class TestTransform:
+    def test_lands_in_own_cluster(self, digits_split, fitted):
+        """Held-out points land nearest their own class's fitted cluster:
+        embedding-space KNN-label agreement >= the input-space baseline."""
+        (train_x, train_l), (test_x, test_l) = digits_split
+        y_new, stats = fitted.transform(test_x, return_stats=True)
+        assert y_new.shape == (len(test_x), 2)
+        assert np.isfinite(y_new).all()
+        assert (stats.n_steps >= 1).all()
+
+        def knn_label_acc(space_train, space_test):
+            d2 = ((space_test[:, None, :] - space_train[None]) ** 2).sum(-1)
+            votes = train_l[np.argsort(d2, axis=1)[:, :5]]
+            pred = np.array([np.bincount(v).argmax() for v in votes])
+            return (pred == test_l).mean()
+
+        baseline = knn_label_acc(train_x, test_x)       # input-space 5-NN
+        acc = knn_label_acc(fitted.embedding_, y_new)   # embedding-space 5-NN
+        assert acc >= baseline - 0.05
+        assert acc >= 0.8
+
+    def test_no_retrace_across_batches(self, digits_split, fitted):
+        # fixed-shape step: different batch sizes share one jit trace
+        _, (test_x, _) = digits_split
+        fitted.transform(test_x[:20])
+        n_traces = len(TRACE_LOG)
+        fitted.transform(test_x[:7])
+        fitted.transform(test_x[:33])
+        assert len(TRACE_LOG) == n_traces
+
+    def test_transform_is_deterministic(self, digits_split, fitted):
+        _, (test_x, _) = digits_split
+        a = fitted.transform(test_x[:12])
+        b = fitted.transform(test_x[:12])
+        np.testing.assert_array_equal(a, b)
+
+    def test_reuses_fitted_neighbor_structure(self, fitted):
+        # the query index is built once and cached until the next fit
+        idx1 = fitted.query_index_
+        assert fitted.query_index_ is idx1
+        assert idx1.n_reference == fitted.embedding_.shape[0]
+        assert fitted.query_k_ == fitted.n_neighbors_
+
+    def test_validation(self, digits_split, fitted):
+        _, (test_x, _) = digits_split
+        with pytest.raises(ValueError, match="not fitted"):
+            TSNE().transform(test_x)
+        with pytest.raises(ValueError, match="expected x_new shaped"):
+            fitted.transform(test_x[:, :10])
+        with pytest.raises(ValueError, match="expected x_new shaped"):
+            fitted.transform(test_x[0])
+
+    def test_transform_config_overrides(self, digits_split, fitted):
+        _, (test_x, _) = digits_split
+        cfg = TransformConfig(n_iter=5, check_every=5, batch_size=16)
+        y, stats = fitted.transform(test_x[:8], transform_config=cfg,
+                                    return_stats=True)
+        assert (stats.n_steps <= 5).all()
+        assert np.isfinite(y).all()
+
+
+# --------------------------------------------------------- persistence ------
+class TestSaveLoad:
+    def test_roundtrip_serves_identical_transforms(self, digits_split, fitted,
+                                                   tmp_path):
+        _, (test_x, _) = digits_split
+        path = tmp_path / "digits_model.npz"
+        fitted.save(path)
+        loaded = TSNE.load(path)
+        np.testing.assert_array_equal(loaded.embedding_, fitted.embedding_)
+        assert loaded.kl_divergence_ == pytest.approx(fitted.kl_divergence_)
+        assert loaded.n_neighbors_ == fitted.n_neighbors_
+        assert loaded.perplexity == fitted.perplexity
+        # the persisted sparse-P graph survives
+        g, g0 = loaded.neighbor_graph_, fitted.neighbor_graph_
+        np.testing.assert_array_equal(np.asarray(g.p_cols),
+                                      np.asarray(g0.p_cols))
+        np.testing.assert_allclose(np.asarray(g.p_vals),
+                                   np.asarray(g0.p_vals), rtol=1e-6)
+        # and the loaded model answers transform queries identically
+        np.testing.assert_allclose(loaded.transform(test_x[:10]),
+                                   fitted.transform(test_x[:10]), atol=1e-5)
+
+    def test_unfitted_save_raises(self, tmp_path):
+        with pytest.raises(ValueError, match="not fitted"):
+            TSNE().save(tmp_path / "nope.npz")
+
+
+# -------------------------------------------------------------- service -----
+class TestEmbeddingService:
+    def test_drains_32_requests_through_8_slots(self, digits_split, fitted):
+        # tentpole acceptance: 32-request queue, <= 8 slots, all completed,
+        # per-request stats reported
+        _, (test_x, _) = digits_split
+        service = EmbeddingService(slots=8, max_k=48)
+        service.add_model("digits", fitted)
+        for i in range(32):
+            service.submit(TransformRequest(rid=i, dataset="digits",
+                                            x=test_x[i]))
+        done = service.run()
+        assert len(done) == 32
+        for req in done:
+            assert req.done and req.y is not None
+            assert np.isfinite(req.y).all()
+            assert req.n_steps >= 1
+            assert req.latency_s > 0 and req.service_s > 0
+            assert np.isfinite(req.grad_norm)
+        s = service.stats()
+        assert s["completed"] == 32 and s["queued"] == 0
+        assert s["steps_mean"] >= 1 and s["latency_s_p50"] > 0
+        # service results agree with the batch transform path
+        y_batch = fitted.transform(test_x[:32])
+        y_srv = np.stack([r.y for r in sorted(done, key=lambda r: r.rid)])
+        assert np.linalg.norm(y_srv - y_batch, axis=1).max() < 0.1
+
+    def test_multi_dataset_cache(self, digits_split, fitted):
+        _, (test_x, _) = digits_split
+        x2, _ = make_dataset("mnist", n=160)
+        service = EmbeddingService(slots=4, max_k=48)
+        service.add_model("digits", fitted)
+        service.fit_dataset("mnist_small", x2[:140], perplexity=8.0,
+                            n_iter=80, kl_every=40, random_state=1)
+        assert service.models() == ("digits", "mnist_small")
+        for i in range(6):
+            service.submit(TransformRequest(rid=i, dataset="digits",
+                                            x=test_x[i]))
+            service.submit(TransformRequest(rid=100 + i, dataset="mnist_small",
+                                            x=x2[140 + i]))
+        done = service.run()
+        assert len(done) == 12
+        assert {r.dataset for r in done} == {"digits", "mnist_small"}
+        assert all(np.isfinite(r.y).all() for r in done)
+
+    def test_submit_unknown_dataset_raises(self):
+        service = EmbeddingService(slots=2)
+        with pytest.raises(ValueError, match="unknown dataset"):
+            service.submit(TransformRequest(rid=0, dataset="nope",
+                                            x=np.zeros(4)))
+
+    def test_unfitted_model_rejected(self):
+        service = EmbeddingService(slots=2)
+        with pytest.raises(ValueError, match="not fitted"):
+            service.add_model("raw", TSNE())
+
+    def test_step_on_empty_pool_is_false(self):
+        assert EmbeddingService(slots=2).step() is False
+
+    def test_load_model_from_save(self, digits_split, fitted, tmp_path):
+        _, (test_x, _) = digits_split
+        path = tmp_path / "m.npz"
+        fitted.save(path)
+        service = EmbeddingService(slots=2, max_k=48)
+        service.load_model("digits", path)
+        service.submit(TransformRequest(rid=0, dataset="digits", x=test_x[0]))
+        done = service.run()
+        assert len(done) == 1 and np.isfinite(done[0].y).all()
+
+
+# ------------------------------------------------------ transform_batch -----
+class TestTransformBatch:
+    def test_direct_driver_padding(self, fitted, digits_split):
+        # m smaller than, equal to, and not divisible by batch_size
+        _, (test_x, _) = digits_split
+        cfg = TransformConfig(n_iter=30, batch_size=8)
+        for m in (3, 8, 11):
+            y, stats = transform_batch(
+                test_x[:m], fitted.query_index_, fitted.embedding_,
+                k=fitted.query_k_, perplexity=fitted.perplexity, config=cfg,
+            )
+            assert y.shape == (m, 2) and np.isfinite(y).all()
+            assert stats.n_steps.shape == (m,)
