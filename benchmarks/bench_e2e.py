@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import time
 
-from benchmarks.common import emit
+from benchmarks.common import emit, record_phases
 from repro.api import TSNE
 from repro.data.datasets import SPECS, make_dataset
 
@@ -46,6 +46,8 @@ def run(n_iter: int = 250, scale: float = 1.0, perplexity: float = 30.0):
             est.fit(x)
             times[vname] = time.perf_counter() - t0
             kls[vname] = est.kl_divergence_
+            # per-phase breakdown (paper Tables 5/6) into the JSON artifact
+            record_phases(f"e2e_{name}_n{n}_{vname}", est.timings_)
         sp = times["naive_bh"] / times["acc_tsne"]
         for vname in variants:
             emit(f"e2e_{name}_n{n}_{vname}", times[vname] * 1e6,

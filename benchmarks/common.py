@@ -8,6 +8,7 @@ import os
 import pathlib
 import platform
 import re
+import subprocess
 import time
 
 import jax
@@ -21,10 +22,45 @@ from repro.data.datasets import make_dataset
 
 ROWS: list[tuple[str, float, str]] = []
 
+# per-run-name phase breakdown (knn / bsp / symmetrize / gradient_descent
+# seconds, the paper-Tables-5/6 view) — populated by benches that drive the
+# full pipeline, persisted under "phases" in the BENCH_<n>.json artifact
+PHASES: dict[str, dict] = {}
+
 
 def emit(name: str, us_per_call: float, derived: str = ""):
     ROWS.append((name, us_per_call, derived))
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def record_phases(name: str, timings: dict | None) -> None:
+    """Store a fit's per-phase timing dict (``TSNE().timings_`` /
+    ``run_tsne`` timings) under ``name`` for the JSON artifact."""
+    if not timings:
+        return
+    PHASES[name] = {
+        k: (round(v, 6) if isinstance(v, float) else v)
+        for k, v in timings.items()
+    }
+
+
+def git_provenance() -> dict:
+    """Commit hash + dirty flag of the repo this run came from, so BENCH
+    artifacts are attributable to a source state ('numbers in commit
+    messages' was the failure mode).  Empty dict outside a git checkout."""
+    root = pathlib.Path(__file__).resolve().parent.parent
+    try:
+        commit = subprocess.run(
+            ["git", "rev-parse", "HEAD"], cwd=root, capture_output=True,
+            text=True, timeout=10, check=True,
+        ).stdout.strip()
+        dirty = bool(subprocess.run(
+            ["git", "status", "--porcelain"], cwd=root, capture_output=True,
+            text=True, timeout=10, check=True,
+        ).stdout.strip())
+        return dict(commit=commit, dirty=dirty)
+    except Exception:
+        return {}
 
 
 def machine_info() -> dict:
@@ -56,23 +92,28 @@ def write_bench_json(out_dir, *, benches, argv, wall_s) -> pathlib.Path:
     """Persist every row emitted so far as the next ``BENCH_<n>.json``.
 
     The artifact is the per-PR perf trajectory: ``results`` mirrors the CSV
-    rows (name / us_per_call / derived), plus machine info and provenance,
+    rows (name / us_per_call / derived), plus machine info, git provenance
+    (commit + dirty flag), and ``phases`` — the per-fit
+    knn/bsp/symmetrize/gradient_descent breakdown recorded through
+    :func:`record_phases`, the artifact form of the paper's Tables 5/6 —
     so regressions are diffable across commits instead of living only in
     commit messages.
     """
     pathlib.Path(out_dir).mkdir(parents=True, exist_ok=True)
     path = next_bench_path(out_dir)
     payload = dict(
-        schema=1,
+        schema=2,
         created=datetime.datetime.now(datetime.timezone.utc).isoformat(),
         argv=list(argv),
         benches=list(benches),
         machine=machine_info(),
+        git=git_provenance(),
         total_wall_s=round(wall_s, 2),
         results=[
             dict(name=n, us_per_call=round(us, 1), derived=d)
             for n, us, d in ROWS
         ],
+        phases=dict(PHASES),
     )
     path.write_text(json.dumps(payload, indent=2) + "\n")
     return path

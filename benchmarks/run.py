@@ -1,13 +1,19 @@
 """Benchmark harness — one bench per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--bench steps,e2e,accuracy,scaling]
+    PYTHONPATH=src python -m benchmarks.run [--bench steps,e2e,accuracy,scaling,knn]
                                             [--quick] [--n N] [--scale S]
                                             [--out-dir DIR | --no-json]
+                                            [--trace [PATH]]
 
 Prints ``name,us_per_call,derived`` CSV rows (benchmarks.common.emit) and
-persists the full run — rows + machine info + provenance — as the next
-``BENCH_<n>.json`` in ``--out-dir`` (default: the repo root), the per-PR
-perf-trajectory artifact the ROADMAP calls for.
+persists the full run — rows + per-phase fit breakdowns (paper Tables 5/6)
++ machine info + git provenance — as the next ``BENCH_<n>.json`` in
+``--out-dir`` (default: the repo root), the per-PR perf-trajectory artifact
+the ROADMAP calls for.  ``--bench`` names are validated against the known
+set; an unknown name (e.g. a typo like ``--bench step``) is an error, not a
+silent no-op run.  ``--trace`` enables the process-global span tracer for
+the whole run and writes a Perfetto-loadable Chrome-trace JSON (default
+``trace_bench.json`` next to the artifact).
 Paper mapping: steps -> Tables 5/6; e2e -> Table 4 / Fig 4; accuracy ->
 Table 3; scaling -> Fig 5/6 (algorithmic form — see bench_scaling docstring).
 Roofline reporting lives in benchmarks/roofline.py (reads dry-run JSON).
@@ -21,10 +27,13 @@ import time
 
 REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
 
+KNOWN_BENCHES = ("steps", "accuracy", "scaling", "e2e", "knn")
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--bench", default="steps,accuracy,scaling,e2e,knn")
+    ap.add_argument("--bench", default=",".join(KNOWN_BENCHES),
+                    help=f"comma-separated subset of {', '.join(KNOWN_BENCHES)}")
     ap.add_argument("--quick", action="store_true", help="small sizes (CI)")
     ap.add_argument("--n", type=int, default=None, help="points for step bench")
     ap.add_argument("--scale", type=float, default=None, help="e2e dataset scale")
@@ -32,8 +41,26 @@ def main() -> None:
                     help="directory for the BENCH_<n>.json artifact")
     ap.add_argument("--no-json", action="store_true",
                     help="skip writing the BENCH_<n>.json artifact")
+    ap.add_argument("--trace", nargs="?", const="", default=None,
+                    metavar="PATH",
+                    help="enable span tracing; write Chrome-trace JSON to "
+                         "PATH (default: <out-dir>/trace_bench.json)")
     args = ap.parse_args()
     benches = [b.strip() for b in args.bench.split(",") if b.strip()]
+    unknown = [b for b in benches if b not in KNOWN_BENCHES]
+    if not benches:
+        ap.error("--bench selected no benchmarks")
+    if unknown:
+        ap.error(
+            f"unknown bench name(s): {', '.join(unknown)} "
+            f"(known: {', '.join(KNOWN_BENCHES)})"
+        )
+
+    tracer = None
+    if args.trace is not None:
+        from repro import obs
+        tracer = obs.set_tracer(obs.Tracer())
+
     t0 = time.time()
     print("name,us_per_call,derived")
 
@@ -65,6 +92,12 @@ def main() -> None:
             args.out_dir, benches=benches, argv=sys.argv[1:], wall_s=wall_s
         )
         print(f"# wrote {path}", file=sys.stderr)
+    if tracer is not None:
+        trace_path = args.trace or str(
+            pathlib.Path(args.out_dir) / "trace_bench.json")
+        tracer.to_chrome_trace(trace_path, process_name="benchmarks")
+        print(f"# wrote Chrome trace ({len(tracer.spans)} spans) to "
+              f"{trace_path}", file=sys.stderr)
 
 
 if __name__ == "__main__":

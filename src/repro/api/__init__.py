@@ -21,6 +21,7 @@ from repro.neighbors import (
     unregister_neighbor_backend,
 )
 from repro.embed import EmbeddingService, TransformConfig, TransformRequest
+from repro.obs import MetricsRegistry, RecompileProbe, Tracer
 
 __all__ = [
     "TSNE",
@@ -31,6 +32,7 @@ __all__ = [
     "unregister_neighbor_backend", "available_neighbor_backends",
     "make_neighbor_backend", "build_query_index",
     "EmbeddingService", "TransformConfig", "TransformRequest",
+    "MetricsRegistry", "RecompileProbe", "Tracer",
     "GradResult", "IterationStats", "NeighborGraph", "ObserverFn",
     "TsneConfig", "TsneResult", "preprocess", "run_tsne",
 ]

@@ -14,6 +14,7 @@ from typing import Iterable, Mapping
 
 import numpy as np
 
+from repro import obs
 from repro.core.tsne import (
     IterationStats, NeighborGraph, ObserverFn, TsneConfig, TsneResult,
     run_tsne,
@@ -47,6 +48,14 @@ class TSNE:
     neighbor_options : mapping
         constructor options for the neighbor backend (e.g.
         ``{"n_trees": 16}``, ``{"refine_iters": 3}``).
+    trace : bool, str or None
+        observability switch.  ``None`` (default) defers to the process
+        environment (``TSNE_TRACE=1`` enables the global tracer with
+        near-zero overhead otherwise); ``True`` records this estimator's
+        fits/transforms on a private tracer exposed as ``tracer_`` (with a
+        matching ``metrics_`` registry); a string additionally writes a
+        Chrome-trace JSON — loadable in Perfetto — to that path after each
+        ``fit``.
     """
 
     def __init__(
@@ -68,6 +77,7 @@ class TSNE:
         n_neighbors: int | None = None,
         neighbor_method: str = "exact",
         neighbor_options: Mapping | None = None,
+        trace: bool | str | None = None,
     ):
         self.n_components = n_components
         self.perplexity = perplexity
@@ -85,6 +95,7 @@ class TSNE:
         self.n_neighbors = n_neighbors
         self.neighbor_method = neighbor_method
         self.neighbor_options = dict(neighbor_options or {})
+        self.trace = trace
 
     # -- sklearn plumbing ---------------------------------------------------
 
@@ -106,6 +117,7 @@ class TSNE:
             "n_neighbors": self.n_neighbors,
             "neighbor_method": self.neighbor_method,
             "neighbor_options": self.neighbor_options,
+            "trace": self.trace,
         }
 
     def set_params(self, **params) -> "TSNE":
@@ -116,6 +128,23 @@ class TSNE:
         return self
 
     # -- core ---------------------------------------------------------------
+
+    def _setup_obs(self) -> tuple:
+        """Resolve the ``trace`` knob into ``(tracer, metrics)`` for a run.
+
+        ``trace`` falsy: globals (enabled only under ``TSNE_TRACE``) —
+        ``tracer_`` / ``metrics_`` point at them when active, else ``None``.
+        ``trace`` truthy: a fresh private tracer + registry per fit, kept on
+        the estimator so ``transform`` calls append to the same trace.
+        """
+        if not self.trace:
+            g = obs.get_tracer()
+            self.tracer_ = g if g.enabled else None
+            self.metrics_ = obs.get_metrics() if g.enabled else None
+            return None, None            # run_tsne falls back to the globals
+        self.tracer_ = obs.Tracer()
+        self.metrics_ = obs.MetricsRegistry()
+        return self.tracer_, self.metrics_
 
     def _build_config(self, n: int) -> TsneConfig:
         cfg = TsneConfig(
@@ -189,12 +218,17 @@ class TSNE:
             for fn in observers:
                 fn(stats)
 
+        tracer, metrics = self._setup_obs()
         result: TsneResult = run_tsne(
             x, config,
             observer=observer if observers else None,
             kl_every=self.kl_every,
             backend=backend,
+            tracer=tracer,
+            metrics=metrics,
         )
+        if isinstance(self.trace, str) and tracer is not None:
+            tracer.to_chrome_trace(self.trace, process_name="tsne.fit")
         self.embedding_ = result.y
         self.kl_divergence_ = result.kl
         self.kl_history_ = result.kl_history
@@ -272,6 +306,7 @@ class TSNE:
         y, stats = transform_batch(
             x_new, self.query_index_, self.embedding_,
             k=self.query_k_, perplexity=float(perp), config=cfg,
+            tracer=getattr(self, "tracer_", None),
         )
         return (y, stats) if return_stats else y
 
@@ -315,7 +350,12 @@ class TSNE:
     @classmethod
     def load(cls, path) -> "TSNE":
         """Rebuild a fitted estimator persisted with :meth:`save`; the query
-        index is rebuilt lazily on the first ``transform``."""
+        index is rebuilt lazily on the first ``transform``.
+
+        ``timings_`` is ``None`` on a loaded model: no phases ran in this
+        process, so there is nothing to report — distinct from the populated
+        dict a real ``fit`` leaves behind.  (``{}`` would be indistinguishable
+        from a fitted-but-untimed model.)"""
         z = np.load(path, allow_pickle=False)
         if int(z["schema"]) != cls._SAVE_SCHEMA:
             raise ValueError(
@@ -332,7 +372,7 @@ class TSNE:
         est.learning_rate_ = float(z["learning_rate"])
         est.n_neighbors_ = int(z["n_neighbors_fit"])
         est.n_features_in_ = est._x_fit.shape[1]
-        est.timings_ = {}
+        est.timings_ = None         # loaded, not fitted here: no phase ran
         est._query_index = None
         if "graph_p_cols" in z.files:
             est.neighbor_graph_ = NeighborGraph(

@@ -22,9 +22,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import attractive, bsp, morton, quadtree, similarity
 from repro.core.summarize import summarize as _summarize
 from repro.core.repulsive import bh_repulsion_sorted
+
+# One count per distinct (embedding shape, backend, lr, min_gain) trace of
+# the descent step — compile churn shows up in metric snapshots as
+# ``recompiles.tsne_step`` instead of being invisible.
+TSNE_STEP_RETRACES = obs.RecompileProbe("tsne_step")
 
 # Single source of truth for the attractive-kernel variant ('blocked' is the
 # cache-blocked Alg. 2 — the measured §Perf winner).  TsneConfig, bh_gradient
@@ -238,6 +244,10 @@ def tsne_step(
     ``repro.api.backends``); it is a static argument, so each backend
     compiles its own step program once.
     """
+    TSNE_STEP_RETRACES.record(
+        state.y.shape, type(backend).__name__, getattr(backend, "name", ""),
+        lr, min_gain,
+    )
     res = backend.gradient(state.y, graph, exaggeration)
     grad_norm = jnp.linalg.norm(res.grad)
     new_state = gd_update(state, res.grad, lr, momentum, min_gain)
@@ -276,7 +286,9 @@ class IterationStats:
 ObserverFn = Callable[[IterationStats], None]
 
 
-def preprocess(x: jax.Array, config: TsneConfig) -> tuple[NeighborGraph, dict]:
+def preprocess(
+    x: jax.Array, config: TsneConfig, tracer: obs.Tracer | None = None,
+) -> tuple[NeighborGraph, dict]:
     """KNN + BSP + symmetrization -> (NeighborGraph, stage timings).
 
     The KNN stage dispatches through the ``repro.neighbors`` registry
@@ -284,23 +296,32 @@ def preprocess(x: jax.Array, config: TsneConfig) -> tuple[NeighborGraph, dict]:
     (``neighbor_method``), the resolved ``n_neighbors``, and ``knn_mean_d2``
     — the mean selected squared distance, directly comparable against the
     exact backend's value on the same data as a recall proxy.
+
+    Each stage is a span on ``tracer`` (default: the process-global tracer)
+    with ``block_until_ready`` sync at exit, and the per-stage seconds in
+    the timings dict are those spans' durations — one timing source for
+    both the Perfetto trace and ``timings_``.  When the tracer is disabled
+    a private always-on tracer times the three phases (the spans are
+    discarded with it), so timings stay populated at negligible cost.
     """
     from repro.neighbors import make_neighbor_backend  # lazy: builds on core
+    if tracer is None:
+        tracer = obs.get_tracer()
+    timer = tracer if tracer.enabled else obs.Tracer()
     k = config.resolve_n_neighbors(int(x.shape[0]))
     nb = make_neighbor_backend(
         config.neighbor_method, config.resolve_neighbor_options()
     )
-    t0 = time.perf_counter()
-    idx, d2 = nb.neighbors(x.astype(config.dtype), k)
-    idx.block_until_ready()
-    t_knn = time.perf_counter() - t0
+    with timer.span("knn", backend=nb.name, k=k, n=int(x.shape[0])) as sp_knn:
+        idx, d2 = nb.neighbors(x.astype(config.dtype), k)
+        sp_knn.sync((idx, d2))
 
-    t0 = time.perf_counter()
-    cond_p, _ = bsp.binary_search_perplexity(d2, config.perplexity)
-    cond_p.block_until_ready()
-    t_bsp = time.perf_counter() - t0
+    with timer.span("bsp", perplexity=config.perplexity) as sp_bsp:
+        cond_p, _ = bsp.binary_search_perplexity(d2, config.perplexity)
+        sp_bsp.sync(cond_p)
 
-    t0 = time.perf_counter()
+    sp_sym_ctx = timer.span("symmetrize", layout=config.attractive_impl)
+    sp_sym = sp_sym_ctx.__enter__()
     n = int(x.shape[0])
     if config.attractive_impl == "edges":
         # edge layout: ship only the directed edge list ([N, W] ELL planes
@@ -337,9 +358,11 @@ def preprocess(x: jax.Array, config: TsneConfig) -> tuple[NeighborGraph, dict]:
         n=n,
         has_edges=has_edges,
     )
-    t_sym = time.perf_counter() - t0
+    sp_sym.sync((graph.p_vals, graph.edge_w))
+    sp_sym_ctx.__exit__(None, None, None)
     return graph, dict(
-        knn=t_knn, bsp=t_bsp, symmetrize=t_sym,
+        knn=sp_knn.duration_s, bsp=sp_bsp.duration_s,
+        symmetrize=sp_sym.duration_s,
         neighbor_method=nb.name, n_neighbors=k,
         knn_mean_d2=float(jnp.mean(d2)),
     )
@@ -362,6 +385,8 @@ def run_tsne(
     observer: ObserverFn | None = None,
     kl_every: int = 50,
     backend=None,
+    tracer: obs.Tracer | None = None,
+    metrics: obs.MetricsRegistry | None = None,
 ) -> TsneResult:
     """Full t-SNE run through a pluggable gradient backend.
 
@@ -370,45 +395,102 @@ def run_tsne(
     called with :class:`IterationStats` every ``kl_every`` iterations (and on
     the final one); ``config.min_grad_norm`` stops the descent early at those
     same checkpoints, matching scikit-learn's convergence rule.
+
+    Observability: the run is one ``fit`` span with ``knn`` / ``bsp`` /
+    ``symmetrize`` / ``gradient_descent`` children (the descent splits into
+    ``early_exaggeration`` / ``main_phase``, with a zero-ish-width
+    ``checkpoint`` span per KL evaluation carrying kl / grad-norm / mean
+    gain), all on ``tracer`` — default the process-global one, a no-op
+    unless enabled.  The returned ``timings`` dict is *derived from those
+    spans*, so the Perfetto trace and ``timings_`` can never disagree.
+    Checkpoint stats also land on ``metrics`` (default global registry) as
+    ``fit.grad_norm`` / ``fit.gain_mean`` histograms and ``fit.kl`` gauge.
     """
     x = jnp.asarray(x, config.dtype)
     n = x.shape[0]
     lr = config.resolve_lr(n)
-    graph, timings = preprocess(x, config)
-    state = init_state(n, config)
+    if tracer is None:
+        tracer = obs.get_tracer()
+    if metrics is None:
+        metrics = obs.get_metrics()
+    timer = tracer if tracer.enabled else obs.Tracer()
 
-    if backend is None:
-        from repro.api.backends import make_backend  # lazy: api builds on core
-        backend = make_backend(config.method, config, n)
-    step_kw = dict(backend=backend, lr=lr, min_gain=config.min_gain)
+    fit_ctx = timer.span("fit", n=int(n), method=config.method,
+                         neighbor_method=config.neighbor_method)
+    fit_ctx.__enter__()
+    try:
+        graph, timings = preprocess(x, config, tracer=timer)
+        state = init_state(n, config)
 
-    kl_hist = []
-    t0 = time.perf_counter()
-    kl = float("nan")
-    it = 0
-    for it in range(config.n_iter):
-        exag = config.early_exaggeration if it < config.exaggeration_iters else 1.0
-        mom = config.momentum_initial if it < config.momentum_switch_iter else config.momentum_final
-        state, stats = tsne_step(
-            state, graph,
-            jnp.asarray(exag, config.dtype), jnp.asarray(mom, config.dtype),
-            **step_kw,
-        )
-        if (it + 1) % kl_every == 0 or it == config.n_iter - 1:
-            kl = float(stats.kl)
-            grad_norm = float(stats.grad_norm)
-            kl_hist.append((it + 1, kl))
-            if observer is not None:
-                observer(IterationStats(
-                    iteration=it + 1, kl=kl, grad_norm=grad_norm,
-                    z=float(stats.z), max_traversal=int(stats.max_traversal),
-                    exaggeration=exag, momentum=mom,
-                    elapsed_s=time.perf_counter() - t0,
-                ))
-            if grad_norm < config.min_grad_norm:
-                break
-    state.y.block_until_ready()
-    timings["gradient_descent"] = time.perf_counter() - t0
+        if backend is None:
+            from repro.api.backends import make_backend  # lazy: api builds on core
+            backend = make_backend(config.method, config, n)
+        step_kw = dict(backend=backend, lr=lr, min_gain=config.min_gain)
+
+        kl_hist = []
+        gd_ctx = timer.span("gradient_descent", n_iter=config.n_iter, lr=lr)
+        sp_gd = gd_ctx.__enter__()
+        t0 = sp_gd.t0
+        kl = float("nan")
+        it = 0
+        phase_name: str | None = None
+        phase_ctx = phase_sp = None
+        try:
+            for it in range(config.n_iter):
+                exag = config.early_exaggeration if it < config.exaggeration_iters else 1.0
+                mom = config.momentum_initial if it < config.momentum_switch_iter else config.momentum_final
+                want = "early_exaggeration" if it < config.exaggeration_iters \
+                    else "main_phase"
+                if want != phase_name:
+                    if phase_ctx is not None:
+                        phase_sp.sync(state.y)
+                        phase_ctx.__exit__(None, None, None)
+                    phase_ctx = timer.span(want, start_iter=it,
+                                           exaggeration=exag)
+                    phase_sp = phase_ctx.__enter__()
+                    phase_name = want
+                state, stats = tsne_step(
+                    state, graph,
+                    jnp.asarray(exag, config.dtype), jnp.asarray(mom, config.dtype),
+                    **step_kw,
+                )
+                if (it + 1) % kl_every == 0 or it == config.n_iter - 1:
+                    kl = float(stats.kl)
+                    grad_norm = float(stats.grad_norm)
+                    kl_hist.append((it + 1, kl))
+                    metrics.histogram("fit.grad_norm").observe(grad_norm)
+                    metrics.gauge("fit.kl").set(kl)
+                    metrics.gauge("fit.exaggeration").set(exag)
+                    if timer.enabled and timer is tracer:
+                        # trace-only extras (one extra device pull)
+                        gain_mean = float(jnp.mean(state.gains))
+                        metrics.histogram("fit.gain_mean").observe(gain_mean)
+                        with timer.span(
+                            "checkpoint", iteration=it + 1, kl=kl,
+                            grad_norm=grad_norm, z=float(stats.z),
+                            exaggeration=exag, momentum=mom,
+                            gain_mean=gain_mean,
+                        ):
+                            pass
+                    if observer is not None:
+                        observer(IterationStats(
+                            iteration=it + 1, kl=kl, grad_norm=grad_norm,
+                            z=float(stats.z), max_traversal=int(stats.max_traversal),
+                            exaggeration=exag, momentum=mom,
+                            elapsed_s=time.perf_counter() - t0,
+                        ))
+                    if grad_norm < config.min_grad_norm:
+                        break
+        finally:
+            if phase_ctx is not None:
+                phase_sp.sync(state.y)
+                phase_ctx.__exit__(None, None, None)
+            sp_gd.sync(state.y)
+            gd_ctx.__exit__(None, None, None)
+        timings["gradient_descent"] = sp_gd.duration_s
+        metrics.counter("fit.iterations").inc(it + 1)
+    finally:
+        fit_ctx.__exit__(None, None, None)
     return TsneResult(
         y=np.asarray(state.y),
         kl=kl,

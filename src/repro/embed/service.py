@@ -28,6 +28,7 @@ from collections import deque
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.embed.transform import (
     TransformConfig, TransformState, prepare_batch, transform_step,
 )
@@ -73,12 +74,25 @@ class EmbeddingService:
         slots: int = 8,
         max_k: int = 96,
         config: TransformConfig = TransformConfig(),
+        metrics: obs.MetricsRegistry | None = None,
+        tracer: obs.Tracer | None = None,
     ):
+        """``metrics`` (default: a private registry, exposed as
+        ``self.metrics``) continuously records service telemetry:
+        ``service.queue_depth`` / ``service.slot_occupancy`` gauges
+        (refreshed every tick, high-water marks kept),
+        ``service.latency_s`` / ``service.service_s`` / ``service.steps``
+        histograms observed at request retirement, and ``service.ticks`` /
+        ``service.completed`` counters.  ``tracer`` (default: the process
+        global, a no-op unless enabled) spans each admission and engine
+        tick."""
         if slots < 1:
             raise ValueError(f"slots={slots} must be >= 1")
         self.slots = slots
         self.max_k = max_k
         self.config = config
+        self.metrics = metrics if metrics is not None else obs.MetricsRegistry()
+        self.tracer = tracer if tracer is not None else obs.get_tracer()
         self._models: dict[str, object] = {}       # name -> fitted TSNE
         self.queue: deque[TransformRequest] = deque()
         self.active: list[TransformRequest | None] = [None] * slots
@@ -128,15 +142,19 @@ class EmbeddingService:
             )
         req.submitted_at = time.perf_counter()
         self.queue.append(req)
+        self.metrics.gauge("service.queue_depth").set(len(self.queue))
 
     def _admit(self, slot: int, req: TransformRequest) -> None:
         """Query + perplexity search + init for one request, into ``slot``."""
         model = self._models[req.dataset]
         k = min(model.query_k_, self.max_k)
-        p, nbr_y, y0 = prepare_batch(
-            jnp.asarray(req.x, jnp.float32)[None], model.query_index_,
-            model.embedding_, k, model.perplexity,
-        )
+        with self.tracer.span("service.admit", rid=req.rid,
+                              dataset=req.dataset, slot=slot) as sp:
+            p, nbr_y, y0 = prepare_batch(
+                jnp.asarray(req.x, jnp.float32)[None], model.query_index_,
+                model.embedding_, k, model.perplexity,
+            )
+            sp.sync((p, y0))
         p_row = np.zeros((self.max_k,), np.float32)
         p_row[:k] = np.asarray(p[0])
         nbr_row = np.zeros((self.max_k, 2), np.float32)
@@ -165,6 +183,9 @@ class EmbeddingService:
         False once the pool and queue are both empty."""
         self._refill()
         active_mask = np.array([r is not None for r in self.active])
+        m = self.metrics
+        m.gauge("service.queue_depth").set(len(self.queue))
+        m.gauge("service.slot_occupancy").set(int(active_mask.sum()))
         if not active_mask.any():
             return False
         cfg = self.config
@@ -172,12 +193,16 @@ class EmbeddingService:
             self._steps < cfg.momentum_switch_iter,
             cfg.momentum_initial, cfg.momentum_final,
         ).astype(np.float32)
-        self._state, grad_norm, _ = transform_step(
-            self._state, self._p, self._nbr_y,
-            jnp.asarray(active_mask), jnp.asarray(momentum),
-            lr=cfg.learning_rate, min_gain=cfg.min_gain,
-        )
+        with self.tracer.span("service.tick", tick=self.ticks,
+                              occupancy=int(active_mask.sum())) as sp:
+            self._state, grad_norm, _ = transform_step(
+                self._state, self._p, self._nbr_y,
+                jnp.asarray(active_mask), jnp.asarray(momentum),
+                lr=cfg.learning_rate, min_gain=cfg.min_gain,
+            )
+            sp.sync(grad_norm)
         self.ticks += 1
+        m.counter("service.ticks").inc()
         gn = np.asarray(grad_norm)
         y_now = None
         for s, req in enumerate(self.active):
@@ -194,6 +219,13 @@ class EmbeddingService:
                 req.finished_at = time.perf_counter()
                 self.completed.append(req)
                 self.active[s] = None
+                m.counter("service.completed").inc()
+                m.histogram("service.latency_s").observe(req.latency_s)
+                m.histogram("service.service_s").observe(req.service_s)
+                m.histogram("service.steps").observe(req.n_steps)
+        # post-retirement refresh so a drained pool reads occupancy 0
+        m.gauge("service.slot_occupancy").set(
+            sum(r is not None for r in self.active))
         return True
 
     def run(self, max_ticks: int = 100_000) -> list[TransformRequest]:
@@ -209,28 +241,48 @@ class EmbeddingService:
     # ------------------------------------------------------------- stats --
 
     def stats(self) -> dict:
-        """Aggregate per-request latency / step-count statistics."""
-        done = self.completed
+        """Aggregate service telemetry, O(histogram window) per call.
+
+        Latency / step quantiles come from the bounded ``service.latency_s``
+        and ``service.steps`` histograms maintained at retirement (p50 / p95
+        / p99 over the retained window; count / mean / max exact), instead
+        of re-sorting every completed request on each call.  Queue-depth and
+        slot-occupancy high-water marks come from the gauges."""
+        done = len(self.completed)
         if not done:
             return dict(completed=0, ticks=self.ticks)
-        lat = np.array([r.latency_s for r in done])
-        steps = np.array([r.n_steps for r in done])
+        lat = self.metrics.histogram("service.latency_s")
+        steps = self.metrics.histogram("service.steps")
+        occ = self.metrics.gauge("service.slot_occupancy")
+        qd = self.metrics.gauge("service.queue_depth")
         return dict(
-            completed=len(done),
+            completed=done,
             ticks=self.ticks,
             queued=len(self.queue),
-            datasets=sorted({r.dataset for r in done}),
-            latency_s_mean=float(lat.mean()),
-            latency_s_p50=float(np.percentile(lat, 50)),
-            latency_s_max=float(lat.max()),
-            steps_mean=float(steps.mean()),
-            steps_max=int(steps.max()),
+            datasets=sorted({r.dataset for r in self.completed}),
+            latency_s_mean=lat.mean,
+            latency_s_p50=lat.percentile(50),
+            latency_s_p95=lat.percentile(95),
+            latency_s_p99=lat.percentile(99),
+            latency_s_max=lat.max,
+            steps_mean=steps.mean,
+            steps_p95=steps.percentile(95),
+            steps_max=int(steps.max),
+            slot_occupancy_max=int(occ.max_value) if occ.n_sets else 0,
+            queue_depth_max=int(qd.max_value) if qd.n_sets else 0,
         )
 
 
-def _smoke() -> None:
-    """CI smoke: fit a small dataset, push requests through the queue."""
+def _smoke(trace_path: str | None = None) -> None:
+    """CI smoke: fit a small dataset, push requests through the queue.
+
+    ``trace_path`` enables the process-global tracer for the whole run
+    (fit + admissions + ticks) and writes the Chrome-trace JSON there."""
     from repro.data.datasets import make_dataset
+
+    tracer = None
+    if trace_path:
+        tracer = obs.set_tracer(obs.Tracer())
 
     x, _ = make_dataset("digits", n=480)
     train, new = x[:400], x[400:432]
@@ -252,8 +304,15 @@ def _smoke() -> None:
         f"embedding-service smoke OK: {s['completed']} requests through "
         f"{service.slots} slots in {wall:.1f}s ({s['ticks']} ticks, "
         f"mean {s['steps_mean']:.0f} steps, "
-        f"p50 latency {s['latency_s_p50'] * 1e3:.0f}ms)"
+        f"p50/p95 latency {s['latency_s_p50'] * 1e3:.0f}/"
+        f"{s['latency_s_p95'] * 1e3:.0f}ms, "
+        f"occupancy<= {s['slot_occupancy_max']}, "
+        f"queue<= {s['queue_depth_max']})"
     )
+    if tracer is not None:
+        tracer.to_chrome_trace(trace_path, process_name="embed.service")
+        n_ev = len(tracer.spans)
+        print(f"wrote Chrome trace ({n_ev} spans) to {trace_path}")
 
 
 if __name__ == "__main__":
@@ -262,8 +321,11 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="fit a small dataset and drain a short queue (CI)")
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="enable tracing and write a Perfetto-loadable "
+                         "Chrome-trace JSON of the smoke run to PATH")
     args = ap.parse_args()
     if args.smoke:
-        _smoke()
+        _smoke(trace_path=args.trace)
     else:
         ap.error("this module is a library; run with --smoke for the CI check")

@@ -28,13 +28,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import bsp
 from repro.core.attractive import attractive_forces_frozen
 
-# trace-time side effect: appended to once per (shape, static-arg) compile of
-# transform_step — tests assert it does NOT grow across different batch
-# payloads, i.e. the fixed-shape step really is traced once
-TRACE_LOG: list[tuple] = []
+# Trace-time probe: one count per distinct (shape, static-arg) compile of
+# transform_step.  Tests assert ``RETRACE_PROBE.count`` does NOT grow across
+# different batch payloads — the fixed-shape step really is traced once —
+# and service telemetry reports it as ``recompiles.transform_step``.
+RETRACE_PROBE = obs.RecompileProbe("transform_step")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -81,7 +83,7 @@ def transform_step(
 ):
     """One attractive-only descent step; returns (state, grad_norm [B],
     kl_attr [B]).  Same momentum/gains rule as the full optimizer."""
-    TRACE_LOG.append((state.y.shape, p.shape, lr, min_gain))
+    RETRACE_PROBE.record(state.y.shape, p.shape, lr, min_gain)
     force, kl_attr = attractive_forces_frozen(state.y, nbr_y, p)
     grad = 4.0 * force
     grad_norm = jnp.linalg.norm(grad, axis=1)
@@ -124,6 +126,7 @@ def transform_batch(
     k: int,
     perplexity: float,
     config: TransformConfig = TransformConfig(),
+    tracer: obs.Tracer | None = None,
 ) -> tuple[np.ndarray, TransformStats]:
     """Embed ``x_new [M, D]`` into the frozen fit; M is arbitrary.
 
@@ -131,7 +134,13 @@ def transform_batch(
     jitted :func:`transform_step`; each chunk stops early once every live
     point's gradient norm drops under ``min_grad_norm`` (checked every
     ``check_every`` iterations, like the full loop's convergence rule).
+
+    When ``tracer`` (default: the process-global tracer) is enabled the call
+    is one ``transform`` span with a ``transform.prepare`` (query +
+    perplexity search) and ``transform.descend`` child per chunk.
     """
+    if tracer is None:
+        tracer = obs.get_tracer()
     x_new = jnp.asarray(x_new)
     m = int(x_new.shape[0])
     bs = config.batch_size
@@ -140,11 +149,17 @@ def transform_batch(
     out_gn = np.zeros(m, np.float32)
     out_kl = np.zeros(m, np.float32)
 
+    batch_ctx = tracer.span("transform", m=m, k=k, batch_size=bs)
+    batch_ctx.__enter__()
     for lo in range(0, m, bs):
         chunk = x_new[lo:lo + bs]
         c = int(chunk.shape[0])
         pad = bs - c
-        p, nbr_y, y0 = prepare_batch(chunk, index, y_ref, k, perplexity)
+        with tracer.span("transform.prepare", rows=c) as sp_prep:
+            p, nbr_y, y0 = prepare_batch(chunk, index, y_ref, k, perplexity)
+            sp_prep.sync((p, y0))
+        desc_ctx = tracer.span("transform.descend", rows=c)
+        desc_ctx.__enter__()
         if pad:
             p = jnp.pad(p, ((0, pad), (0, 0)))
             nbr_y = jnp.pad(nbr_y, ((0, pad), (0, 0), (0, 0)))
@@ -181,6 +196,8 @@ def transform_batch(
         out_steps[lo:lo + c] = steps[:c]
         out_gn[lo:lo + c] = gn_h[:c]
         out_kl[lo:lo + c] = kl_h[:c]
+        desc_ctx.__exit__(None, None, None)
+    batch_ctx.__exit__(None, None, None)
 
     return out_y, TransformStats(n_steps=out_steps, grad_norm=out_gn,
                                  kl_attr=out_kl)

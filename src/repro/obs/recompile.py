@@ -1,0 +1,73 @@
+"""JAX recompile probe: count distinct ``(shape, static-args)`` traces.
+
+Retracing is the silent performance killer of a jitted serving path — a
+schedule value passed as a static argument, or a batch that isn't padded
+to a fixed shape, quietly compiles a new program per variant.  The probe
+is a trace-time side effect: call :meth:`RecompileProbe.record` with the
+abstract shapes / static values *inside* the jitted function, and it runs
+only when JAX traces (not on cached executions), so
+
+    PROBE = RecompileProbe("transform_step")
+
+    @jax.jit
+    def step(x):
+        PROBE.record(x.shape, x.dtype.name)
+        ...
+
+``PROBE.count`` is the number of *distinct* compiled variants, and stays
+flat across calls that reuse a trace — the property the no-retrace tests
+assert.  ``PROBE.calls`` counts every trace event (a cache-evicted retrace
+of a seen key still increments it).  This replaces ad-hoc module-global
+trace logs (the old ``TRACE_LOG`` list in ``repro.embed.transform``),
+which grew unbounded and counted nothing.
+
+Probes register on a :class:`~repro.obs.metrics.MetricsRegistry` (the
+process-global one by default) as ``recompiles.<name>``, so service
+telemetry snapshots include compile churn for free.
+"""
+from __future__ import annotations
+
+import threading
+
+
+class RecompileProbe:
+    """Counts distinct trace keys of one jitted function."""
+
+    def __init__(self, name: str, registry=None):
+        self.name = name
+        self._keys: set = set()
+        self._calls = 0
+        self._lock = threading.Lock()
+        if registry is None:
+            from repro.obs import get_metrics
+            registry = get_metrics()
+        self._counter = registry.counter(f"recompiles.{name}")
+
+    def record(self, *key) -> None:
+        """Record one trace event keyed by ``key`` (shapes, dtypes, static
+        argument values — anything hashable).  Call inside the jitted
+        function so it fires at trace time only."""
+        with self._lock:
+            self._calls += 1
+            if key not in self._keys:
+                self._keys.add(key)
+                self._counter.inc()
+
+    @property
+    def count(self) -> int:
+        """Distinct compiled variants seen (unique trace keys)."""
+        return len(self._keys)
+
+    @property
+    def calls(self) -> int:
+        """Total trace events, including re-traces of seen keys."""
+        return self._calls
+
+    @property
+    def keys(self) -> frozenset:
+        return frozenset(self._keys)
+
+    def reset(self) -> None:
+        with self._lock:
+            self._keys.clear()
+            self._calls = 0

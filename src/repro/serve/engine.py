@@ -16,6 +16,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
+
 
 @dataclasses.dataclass
 class Request:
@@ -27,9 +29,18 @@ class Request:
 
 
 class ServeEngine:
+    """``metrics`` (default: a private registry on ``self.metrics``)
+    records the same telemetry shape as the embedding service:
+    ``serve.queue_depth`` / ``serve.slot_occupancy`` gauges per tick,
+    ``serve.ticks`` / ``serve.completed`` / ``serve.tokens`` counters, and
+    a ``serve.request_tokens`` histogram at retirement — one dashboard
+    vocabulary across both continuous-batching loops."""
+
     def __init__(self, model, batch_slots: int = 4, max_seq: int = 128,
                  eos_id: int | None = None, greedy: bool = True, seed: int = 0,
-                 params: Any | None = None):
+                 params: Any | None = None,
+                 metrics: obs.MetricsRegistry | None = None):
+        self.metrics = metrics if metrics is not None else obs.MetricsRegistry()
         self.model = model
         self.model_params = params
         self.slots = batch_slots
@@ -67,8 +78,12 @@ class ServeEngine:
                 "run(params) instead of stepping directly"
             )
         self._refill()
-        if all(a is None for a in self.active):
+        occupancy = sum(a is not None for a in self.active)
+        self.metrics.gauge("serve.queue_depth").set(len(self.queue))
+        self.metrics.gauge("serve.slot_occupancy").set(occupancy)
+        if occupancy == 0:
             return False
+        self.metrics.counter("serve.ticks").inc()
         tok = jnp.asarray(self.next_token)
         pos = jnp.asarray(self.pos)
         logits, self.cache = self._step(self.model_params, self.cache, tok, pos)
@@ -85,12 +100,16 @@ class ServeEngine:
             token = int(nxt[s])
             req.generated.append(token)
             self.next_token[s] = token
+            self.metrics.counter("serve.tokens").inc()
             if (self.eos_id is not None and token == self.eos_id) or \
                len(req.generated) >= req.max_new_tokens or \
                self.pos[s] >= self.max_seq - 1:
                 req.done = True
                 self.completed.append(req)
                 self.active[s] = None
+                self.metrics.counter("serve.completed").inc()
+                self.metrics.histogram("serve.request_tokens").observe(
+                    len(req.generated))
         return True
 
     def run(self, params: Any | None = None, max_ticks: int = 10_000):
@@ -101,3 +120,8 @@ class ServeEngine:
             self.step()
             ticks += 1
         return self.completed
+
+    def stats(self) -> dict:
+        """Telemetry snapshot (counters, gauge high-water marks, token
+        histogram summary) for the life of the engine."""
+        return self.metrics.snapshot()

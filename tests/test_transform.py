@@ -6,7 +6,7 @@ import pytest
 
 from repro.api import TSNE, EmbeddingService, TransformConfig, TransformRequest
 from repro.data.datasets import make_dataset
-from repro.embed.transform import TRACE_LOG, transform_batch
+from repro.embed.transform import RETRACE_PROBE, transform_batch
 from repro.neighbors import (
     ExactNeighbors, NNDescentNeighbors, RPForestNeighbors, build_query_index,
     recall_at_k,
@@ -114,13 +114,14 @@ class TestTransform:
         assert acc >= 0.8
 
     def test_no_retrace_across_batches(self, digits_split, fitted):
-        # fixed-shape step: different batch sizes share one jit trace
+        # fixed-shape step: different batch sizes share one jit trace —
+        # the obs recompile probe counts distinct compiled variants
         _, (test_x, _) = digits_split
         fitted.transform(test_x[:20])
-        n_traces = len(TRACE_LOG)
+        n_traces = RETRACE_PROBE.count
         fitted.transform(test_x[:7])
         fitted.transform(test_x[:33])
-        assert len(TRACE_LOG) == n_traces
+        assert RETRACE_PROBE.count == n_traces
 
     def test_transform_is_deterministic(self, digits_split, fitted):
         _, (test_x, _) = digits_split
@@ -202,6 +203,19 @@ class TestEmbeddingService:
         s = service.stats()
         assert s["completed"] == 32 and s["queued"] == 0
         assert s["steps_mean"] >= 1 and s["latency_s_p50"] > 0
+        # histogram-backed percentiles are ordered and finite
+        assert s["latency_s_p50"] <= s["latency_s_p95"] <= s["latency_s_p99"]
+        assert s["latency_s_p99"] <= s["latency_s_max"]
+        # gauges saw the load: 32 queued requests through at most 8 lanes,
+        # all 8 occupied at some tick, and telemetry counted every retirement
+        assert s["slot_occupancy_max"] == 8
+        assert 1 <= s["queue_depth_max"] <= 32
+        assert service.metrics.counter("service.completed").value == 32
+        assert service.metrics.counter("service.ticks").value == s["ticks"]
+        assert service.metrics.histogram("service.latency_s").count == 32
+        # drained pool: both gauges ended at zero
+        assert service.metrics.gauge("service.queue_depth").value == 0
+        assert service.metrics.gauge("service.slot_occupancy").value == 0
         # service results agree with the batch transform path
         y_batch = fitted.transform(test_x[:32])
         y_srv = np.stack([r.y for r in sorted(done, key=lambda r: r.rid)])
