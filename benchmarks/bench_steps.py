@@ -57,8 +57,13 @@ def run(n: int = 20000, perplexity: float = 30.0, theta: float = 0.5):
     d2_sub = fx["d2"][:n_bsp]
     t_naive = time_fn(lambda: _bsp_rowloop(d2_sub, perplexity), iters=2)
     t_opt = time_fn(lambda: bsp.binary_search_perplexity(d2_sub, perplexity))
+    t_bsp_pl = time_fn(
+        lambda: bsp.binary_search_perplexity(d2_sub, perplexity, impl="pallas"),
+        iters=2,
+    )
     emit(f"bsp_naive_rowloop_n{n_bsp}", t_naive, "")
     emit(f"bsp_vectorized_n{n_bsp}", t_opt, f"speedup={t_naive / t_opt:.1f}x")
+    emit(f"bsp_pallas_n{n_bsp}", t_bsp_pl, "(interpret mode)")
 
     # --- Quadtree building (paper: 4.5x single-thread, 14.3x multicore) ---
     t_naive = time_fn(lambda: naive.naive_build_and_summarize(y)[0])
@@ -109,3 +114,15 @@ def run(n: int = 20000, perplexity: float = 30.0, theta: float = 0.5):
     t_pl = time_fn(lambda: morton_pallas(y, cent, r))
     emit(f"morton_xla_n{n}", t_xla, "")
     emit(f"morton_pallas_n{n}", t_pl, "(interpret mode)")
+
+    # --- FFT-repulsion interpolation spread/gather, xla vs pallas ---
+    from repro.core.fft_repulsion import fft_repulsion
+    fft_n = min(n, 4000)
+    y_fft = y[:fft_n]
+    t_fx = time_fn(lambda: fft_repulsion(y_fft, n_boxes=48)[0], iters=3)
+    t_fp = time_fn(
+        lambda: fft_repulsion(y_fft, n_boxes=48, interp_impl="pallas")[0],
+        iters=2,
+    )
+    emit(f"fft_interp_xla_n{fft_n}", t_fx, "")
+    emit(f"fft_interp_pallas_n{fft_n}", t_fp, "(interpret mode)")

@@ -119,6 +119,60 @@ def write_bench_json(out_dir, *, benches, argv, wall_s) -> pathlib.Path:
     return path
 
 
+def load_bench_json(path) -> dict:
+    """Read a ``BENCH_<n>.json`` artifact, accepting every schema so far.
+
+    schema 1 (PR 6) lacks ``git`` and ``phases``; schema 2 (PR 7) added
+    them.  Both carry the ``results`` rows ``--compare`` needs, so either
+    side of a comparison may be either version (docs/BENCHMARKS.md).
+    """
+    doc = json.loads(pathlib.Path(path).read_text())
+    schema = doc.get("schema")
+    if schema not in (1, 2):
+        raise ValueError(
+            f"{path}: unsupported BENCH schema {schema!r} (known: 1, 2)"
+        )
+    if not isinstance(doc.get("results"), list):
+        raise ValueError(f"{path}: no results rows")
+    return doc
+
+
+def compare_runs(prev_doc: dict, rows, threshold: float = 0.25):
+    """Per-bench deltas of ``rows`` (current (name, us, derived) tuples)
+    against a previous artifact's ``results``.
+
+    Returns ``(lines, regressions)``: formatted report lines, and a list of
+    ``(name, prev_us, cur_us, delta)`` for every matched bench more than
+    ``threshold`` slower than before.  Benches present on only one side are
+    reported (``NEW`` / ``not run``) but never gate — the trajectory must
+    tolerate benches being added, renamed, or skipped between PRs.
+    """
+    prev = {r["name"]: float(r["us_per_call"])
+            for r in prev_doc.get("results", [])}
+    header = (f"{'bench':44s} {'current_us':>12s} {'previous_us':>12s} "
+              f"{'delta':>8s}")
+    lines = [header]
+    regressions = []
+    cur_names = set()
+    for name, us, _derived in rows:
+        cur_names.add(name)
+        if name not in prev:
+            lines.append(f"{name:44s} {us:12.1f} {'-':>12s} {'NEW':>8s}")
+            continue
+        p = prev[name]
+        delta = (us - p) / p if p > 0 else 0.0
+        flag = f"  REGRESSION (>{threshold:.0%})" if delta > threshold else ""
+        lines.append(
+            f"{name:44s} {us:12.1f} {p:12.1f} {delta:+8.1%}{flag}"
+        )
+        if delta > threshold:
+            regressions.append((name, p, us, delta))
+    for name, p in prev.items():
+        if name not in cur_names:
+            lines.append(f"{name:44s} {'-':>12s} {p:12.1f} {'not run':>8s}")
+    return lines, regressions
+
+
 def time_fn(fn, *args, warmup: int = 1, iters: int = 5, **kw) -> float:
     """Median wall time (us) of a blocking call."""
     for _ in range(warmup):

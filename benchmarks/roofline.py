@@ -1,5 +1,7 @@
-"""Roofline report: reads the dry-run JSONs and prints the per-cell
-three-term analysis (EXPERIMENTS.md §Roofline).
+"""Roofline report, two modes.
+
+Dry-run mode (default) reads the dry-run JSONs and prints the per-cell
+three-term analysis (EXPERIMENTS.md §Roofline):
 
     PYTHONPATH=src python -m benchmarks.roofline [--dir runs/dryrun]
                                                  [--mesh pod256] [--markdown]
@@ -10,14 +12,25 @@ Terms (v5e: 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s/link ICI):
     collective_s = collective_bytes(global) / (chips * link_bw)
 cost_analysis() is per-device on the SPMD module, so global/chips == the
 per-device quantity used directly against per-chip rates.
+
+t-SNE mode (``--tsne``) is the kernel-target picker: it jits each t-SNE
+hot path at a representative size, feeds the *post-optimization* HLO text
+through ``launch/hlo_cost.analyze_hlo`` (loop-trip-count-aware flop/byte
+counting), and prints the paths ranked by modeled memory traffic with
+their arithmetic intensity and Pallas coverage from the ``kernels/ops``
+registry.  Low intensity + high bytes + no kernel = the next target; this
+is the analysis that picked ``bsp_search`` (64 whole-array passes, ~0.4
+flops/byte) and ``fft_spread``/``fft_gather`` (serialized XLA scatter) —
+see docs/KERNELS.md for how to read the output.
+
+    PYTHONPATH=src python -m benchmarks.roofline --tsne [--n 20000] [--k 90]
+                                                 [--boxes 48] [--markdown]
 """
 from __future__ import annotations
 
 import argparse
 import json
 import pathlib
-
-from repro.configs import ARCH_IDS, SHAPES
 
 
 def load(dir_: pathlib.Path, mesh: str):
@@ -39,6 +52,7 @@ def fmt_s(x):
 
 
 def report(dir_: str = "runs/dryrun", mesh: str = "pod256", markdown: bool = False):
+    from repro.configs import ARCH_IDS, SHAPES
     cells = load(pathlib.Path(dir_), mesh)
     sep = "|" if markdown else "  "
     hdr = ["arch", "shape", "compute", "memory", "collective", "bound",
@@ -80,13 +94,119 @@ def report(dir_: str = "runs/dryrun", mesh: str = "pod256", markdown: bool = Fal
     return rows
 
 
+# ---------------------------------------------------------------------------
+# t-SNE hot-path ranking (--tsne)
+# ---------------------------------------------------------------------------
+
+# v5e single-chip rates — the machine balance that decides memory- vs
+# compute-bound (~240 flops/byte crossover for f32-as-bf16 peak)
+_PEAK_FLOPS = 197e12
+_HBM_BW = 819e9
+
+
+def _tsne_cases(n: int, k: int, n_boxes: int) -> dict:
+    """name -> (fn, args): one jittable closure per t-SNE hot path.
+
+    Names match the ``kernels/ops`` registry where a Pallas kernel exists,
+    so the report can show coverage; ``bh_gradient_full`` and ``fft_conv``
+    are the remaining XLA-only aggregates.
+    """
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import _pairwise, attractive, bsp, morton
+    from repro.core import fft_repulsion as fr
+
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(n, 50)).astype(np.float32))
+    y = jnp.asarray(rng.normal(size=(n, 2)).astype(np.float32))
+    d2 = jnp.asarray(np.abs(rng.normal(size=(n, k))).astype(np.float32))
+    cols = jnp.asarray(rng.integers(0, n, size=(n, k)), jnp.int32)
+    vals = jnp.asarray(rng.uniform(0, 1e-3, size=(n, k)).astype(np.float32))
+    nodes = n_boxes * (fr.P_ORDER - 1) + 1
+    base, wx, wy, _h = fr.interp_coords(y, n_boxes)
+    charges = jnp.stack([jnp.ones((n,), jnp.float32), y[:, 0], y[:, 1]], axis=1)
+    pot = jnp.zeros((nodes, nodes, 4), jnp.float32)
+    cent, r_span = morton.span_radius(y)
+
+    def bsp_case(d2):
+        return bsp._binary_search_perplexity_xla(d2, 30.0)
+
+    def spread_case(base, wx, wy, charges):
+        return fr.spread_to_grid(base, wx, wy, charges, nodes)
+
+    def fft_conv_case(y):
+        # the FFT convolution half alone (stays XLA by design)
+        return fr.fft_repulsion(y, n_boxes=n_boxes)
+
+    def morton_case(y, cent, r_span):
+        return morton.morton_encode(y, cent, r_span)
+
+    return {
+        "bsp_search": (bsp_case, (d2,)),
+        "attractive_ell": (attractive.attractive_forces_ell, (y, cols, vals)),
+        "pairwise_sq_dists": (_pairwise.pairwise_sq_dists, (x[:512], x)),
+        "fft_spread": (spread_case, (base, wx, wy, charges)),
+        "fft_gather": (fr.gather_from_grid, (pot, base, wx, wy)),
+        "fft_conv": (fft_conv_case, (y,)),
+        "morton_encode": (morton_case, (y, cent, r_span)),
+    }
+
+
+def tsne_report(n: int = 20000, k: int = 90, n_boxes: int = 48,
+                markdown: bool = False):
+    """Rank t-SNE hot paths by modeled HBM traffic of their compiled HLO."""
+    import jax
+
+    from repro.kernels.ops import available_kernels
+    from repro.launch.hlo_cost import analyze_hlo
+
+    kernelized = set(available_kernels())
+    rows = []
+    for name, (fn, args) in _tsne_cases(n, k, n_boxes).items():
+        hlo = jax.jit(fn).lower(*args).compile().as_text()
+        a = analyze_hlo(hlo)
+        flops, byts = a["flops"], a["bytes"]
+        intensity = flops / byts if byts else 0.0
+        bound = "compute" if intensity > _PEAK_FLOPS / _HBM_BW else "memory"
+        rows.append(dict(
+            name=name, gflops=flops / 1e9, mbytes=byts / 1e6,
+            intensity=intensity, bound=bound,
+            pallas="yes" if name in kernelized else "no",
+        ))
+    rows.sort(key=lambda r: r["mbytes"], reverse=True)
+    hdr = ["hot_path", "GFLOP", "MB_moved", "flops/byte", "bound", "pallas"]
+    if markdown:
+        print("| " + " | ".join(hdr) + " |")
+        print("|" + "---|" * len(hdr))
+        for r in rows:
+            print(f"| {r['name']} | {r['gflops']:.2f} | {r['mbytes']:.1f} "
+                  f"| {r['intensity']:.2f} | {r['bound']} | {r['pallas']} |")
+    else:
+        print(f"{'hot_path':20s} {'GFLOP':>8s} {'MB_moved':>9s} "
+              f"{'flops/byte':>11s} {'bound':>8s} {'pallas':>7s}")
+        for r in rows:
+            print(f"{r['name']:20s} {r['gflops']:8.2f} {r['mbytes']:9.1f} "
+                  f"{r['intensity']:11.2f} {r['bound']:>8s} {r['pallas']:>7s}")
+    return rows
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default="runs/dryrun")
     ap.add_argument("--mesh", default="pod256", choices=["pod256", "pod512"])
     ap.add_argument("--markdown", action="store_true")
+    ap.add_argument("--tsne", action="store_true",
+                    help="rank t-SNE hot paths by modeled HBM traffic")
+    ap.add_argument("--n", type=int, default=20000, help="points (--tsne)")
+    ap.add_argument("--k", type=int, default=90, help="neighbors (--tsne)")
+    ap.add_argument("--boxes", type=int, default=48,
+                    help="FFT grid boxes/dim (--tsne)")
     args = ap.parse_args()
-    report(args.dir, args.mesh, args.markdown)
+    if args.tsne:
+        tsne_report(args.n, args.k, args.boxes, args.markdown)
+    else:
+        report(args.dir, args.mesh, args.markdown)
 
 
 if __name__ == "__main__":

@@ -4,6 +4,8 @@
                                             [--quick] [--n N] [--scale S]
                                             [--out-dir DIR | --no-json]
                                             [--trace [PATH]]
+                                            [--compare PREV.json]
+                                            [--compare-threshold 0.25]
 
 Prints ``name,us_per_call,derived`` CSV rows (benchmarks.common.emit) and
 persists the full run — rows + per-phase fit breakdowns (paper Tables 5/6)
@@ -14,9 +16,18 @@ set; an unknown name (e.g. a typo like ``--bench step``) is an error, not a
 silent no-op run.  ``--trace`` enables the process-global span tracer for
 the whole run and writes a Perfetto-loadable Chrome-trace JSON (default
 ``trace_bench.json`` next to the artifact).
+``--compare PREV.json`` turns the artifact chain into a *regression gate*:
+after the run, every bench present in both runs is diffed
+(``benchmarks.common.compare_runs``) and the process exits nonzero if any
+matched bench is more than ``--compare-threshold`` (default 25%) slower —
+wired into CI against the previous run's uploaded artifact, so the
+trajectory accumulates AND regressions fail the build instead of living
+silently in commit messages.  The new artifact is still written first:
+a regressing run is recorded, then failed.
 Paper mapping: steps -> Tables 5/6; e2e -> Table 4 / Fig 4; accuracy ->
 Table 3; scaling -> Fig 5/6 (algorithmic form — see bench_scaling docstring).
-Roofline reporting lives in benchmarks/roofline.py (reads dry-run JSON).
+Roofline reporting lives in benchmarks/roofline.py (dry-run JSON mode plus
+``--tsne``, the compiled-HLO hot-path ranking that picks kernel targets).
 """
 from __future__ import annotations
 
@@ -45,6 +56,12 @@ def main() -> None:
                     metavar="PATH",
                     help="enable span tracing; write Chrome-trace JSON to "
                          "PATH (default: <out-dir>/trace_bench.json)")
+    ap.add_argument("--compare", default=None, metavar="PREV.json",
+                    help="diff this run against a previous BENCH_<n>.json "
+                         "and exit nonzero on regression")
+    ap.add_argument("--compare-threshold", type=float, default=0.25,
+                    help="relative slowdown that fails --compare "
+                         "(default: 0.25 = 25%%)")
     args = ap.parse_args()
     benches = [b.strip() for b in args.bench.split(",") if b.strip()]
     unknown = [b for b in benches if b not in KNOWN_BENCHES]
@@ -98,6 +115,33 @@ def main() -> None:
         tracer.to_chrome_trace(trace_path, process_name="benchmarks")
         print(f"# wrote Chrome trace ({len(tracer.spans)} spans) to "
               f"{trace_path}", file=sys.stderr)
+    if args.compare is not None:
+        sys.exit(run_compare_gate(args.compare, args.compare_threshold))
+
+
+def run_compare_gate(prev_path: str, threshold: float) -> int:
+    """Diff the rows of this run against ``prev_path``; 1 on regression.
+
+    Factored out of :func:`main` so the regression-exit path is unit-testable
+    without re-running the benches (tests/test_bench_compare.py).
+    """
+    from benchmarks.common import ROWS, compare_runs, load_bench_json
+    prev = load_bench_json(prev_path)
+    lines, regressions = compare_runs(prev, ROWS, threshold=threshold)
+    print(f"# --compare vs {prev_path} "
+          f"(commit {prev.get('git', {}).get('commit', 'unknown')[:12]})",
+          file=sys.stderr)
+    for line in lines:
+        print(line, file=sys.stderr)
+    if regressions:
+        print(f"# FAIL: {len(regressions)} bench(es) regressed more than "
+              f"{threshold:.0%}:", file=sys.stderr)
+        for name, p, us, delta in regressions:
+            print(f"#   {name}: {p:.1f}us -> {us:.1f}us ({delta:+.1%})",
+                  file=sys.stderr)
+        return 1
+    print("# compare OK: no bench regressed beyond threshold", file=sys.stderr)
+    return 0
 
 
 if __name__ == "__main__":

@@ -128,15 +128,22 @@ class BarnesHutBackend:
 
 @dataclasses.dataclass(frozen=True)
 class FFTBackend:
-    """FIt-SNE-style repulsion: interpolate to a grid, convolve via FFT."""
+    """FIt-SNE-style repulsion: interpolate to a grid, convolve via FFT.
+
+    ``interp_impl`` picks the spread/gather implementation: ``"xla"`` (jnp
+    scatter/gather oracles) or ``"pallas"`` (tiled one-hot-matmul kernels,
+    interpret-mode on CPU) — see ``core/fft_repulsion.py``.
+    """
 
     name: ClassVar[str] = "fft"
     n_boxes: int = 48
     attractive_impl: str = DEFAULT_ATTRACTIVE_IMPL
+    interp_impl: str = "xla"
 
     def gradient(self, y, graph: NeighborGraph, exaggeration) -> GradResult:
         f_attr, kl_attr = _attractive(y, graph, self.attractive_impl)
-        f_rep_unnorm, z = fft_repulsion(y, n_boxes=self.n_boxes)
+        f_rep_unnorm, z = fft_repulsion(y, n_boxes=self.n_boxes,
+                                        interp_impl=self.interp_impl)
         return combine_forces(f_attr, kl_attr, f_rep_unnorm, z, exaggeration,
                               graph.p_logp)
 
@@ -207,4 +214,5 @@ def _make_barnes_hut(config: TsneConfig, n: int) -> BarnesHutBackend:
 @register_backend("fft")
 def _make_fft(config: TsneConfig, n: int) -> FFTBackend:
     return FFTBackend(n_boxes=config.fft_n_boxes,
-                      attractive_impl=config.attractive_impl)
+                      attractive_impl=config.attractive_impl,
+                      interp_impl=config.resolve_fft_interp_impl())

@@ -38,7 +38,11 @@ class TSNE:
     backend_options : mapping
         ``TsneConfig`` field overrides for backend construction (e.g.
         ``{"use_pallas": True}``, ``{"compress_tree": False}``,
-        ``{"fft_n_boxes": 96}``).
+        ``{"fft_n_boxes": 96}``).  Kernel dispatch flags ride through here
+        too: ``{"bsp_impl": "pallas"}`` routes the perplexity search through
+        the fused Pallas kernel, ``{"fft_interp_impl": "pallas"}`` the FFT
+        backend's spread/gather; both default to ``"auto"`` (follow
+        ``use_pallas``).  See docs/KERNELS.md.
     n_neighbors : int or None
         KNN graph degree; ``None`` = sklearn's ``int(3 * perplexity)``.
         Always clamped to ``n_samples - 1``.

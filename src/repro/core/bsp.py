@@ -1,10 +1,25 @@
-"""Binary Search Perplexity (paper §3.2), TPU formulation.
+"""Binary Search Perplexity (paper §3.2): XLA reference + Pallas dispatch.
 
 Prior CPU implementations were single-threaded; the paper multithreads the
-per-point search with Numba prange.  Here every point's bisection runs in a
-single branch-free vectorized loop over the whole point axis — "as many
-threads as points".  The search variable is beta_i = 1 / (2 sigma_i^2),
-matching scikit-learn's `_binary_search_perplexity`.
+per-point search with Numba prange.  Two interchangeable implementations
+live behind :func:`binary_search_perplexity`'s ``impl=`` switch:
+
+* ``"xla"`` — the branch-free vectorized formulation below: one
+  ``fori_loop`` whose every bisection step passes over the whole [N, K]
+  array ("as many threads as points").  Simple, but each of the ~64
+  iterations re-reads d2 from memory.
+* ``"pallas"`` — the fused tile kernel
+  (``kernels/bsp_kernel.binary_search_perplexity_pallas``, registered as
+  ``bsp_search`` in the ``kernels/ops`` registry): d2 is tiled over the point
+  axis and the *entire* per-row bisection runs in one VMEM-resident grid
+  step, so d2 is read once instead of ``iters`` times.  Interpret-mode on
+  CPU, compiled on TPU — see docs/KERNELS.md for the dispatch convention
+  and the roofline analysis that picked this target.
+
+Both return identical (cond_p, beta) to float tolerance (parity-tested in
+``tests/test_kernels.py``).  The search variable is beta_i = 1/(2 sigma_i^2),
+matching scikit-learn's ``_binary_search_perplexity``; ``TsneConfig.bsp_impl``
+selects the implementation for the fit pipeline.
 """
 from __future__ import annotations
 
@@ -13,19 +28,39 @@ import functools
 import jax
 import jax.numpy as jnp
 
+BSP_IMPLS = ("xla", "pallas")
 
-@functools.partial(jax.jit, static_argnames=("iters",))
+
 def binary_search_perplexity(
     d2: jax.Array,
     perplexity: float,
     iters: int = 64,
     tol: float = 1e-5,
+    impl: str = "xla",
 ):
     """Conditional similarities p_{j|i} with per-row perplexity == target.
 
     d2 : [N, K] squared distances to the K nearest neighbors (self excluded)
+    impl : "xla" (vectorized whole-array loop) | "pallas" (fused tile kernel)
     Returns (cond_p [N, K], beta [N]).
     """
+    if impl == "pallas":
+        from repro.kernels.ops import binary_search_perplexity as pallas_bsp
+        return pallas_bsp(d2, perplexity, iters=iters, tol=tol)
+    if impl != "xla":
+        raise ValueError(
+            f"unknown bsp impl {impl!r} (known: {', '.join(BSP_IMPLS)})"
+        )
+    return _binary_search_perplexity_xla(d2, perplexity, iters, tol)
+
+
+@functools.partial(jax.jit, static_argnames=("iters",))
+def _binary_search_perplexity_xla(
+    d2: jax.Array,
+    perplexity: float,
+    iters: int = 64,
+    tol: float = 1e-5,
+):
     dtype = d2.dtype
     n = d2.shape[0]
     log_u = jnp.asarray(jnp.log(perplexity), dtype)

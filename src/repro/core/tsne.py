@@ -64,6 +64,12 @@ class TsneConfig:
     knn_block_q: int = 512
     knn_block_db: int = 2048
     use_pallas: bool = False              # route hot loops through Pallas kernels
+    # perplexity-search implementation: 'auto' follows use_pallas;
+    # 'xla' | 'pallas' force one (core/bsp.py dispatch)
+    bsp_impl: str = "auto"
+    # FFT-repulsion spread/gather implementation, same semantics
+    # (core/fft_repulsion.py dispatch, used by the 'fft' backend)
+    fft_interp_impl: str = "auto"
     # 'blocked' (cache-blocked Alg.2 — default, §Perf winner) | 'ell'
     # (plain vectorized) | 'components' (SoA planes) | 'edges' (scatter)
     attractive_impl: str = DEFAULT_ATTRACTIVE_IMPL
@@ -101,6 +107,16 @@ class TsneConfig:
 
     def resolve_depth(self, n: int) -> int:
         return morton.auto_depth(n) if self.depth == "auto" else int(self.depth)
+
+    def resolve_bsp_impl(self) -> str:
+        if self.bsp_impl == "auto":
+            return "pallas" if self.use_pallas else "xla"
+        return self.bsp_impl
+
+    def resolve_fft_interp_impl(self) -> str:
+        if self.fft_interp_impl == "auto":
+            return "pallas" if self.use_pallas else "xla"
+        return self.fft_interp_impl
 
 
 class TsneState(NamedTuple):
@@ -316,8 +332,11 @@ def preprocess(
         idx, d2 = nb.neighbors(x.astype(config.dtype), k)
         sp_knn.sync((idx, d2))
 
-    with timer.span("bsp", perplexity=config.perplexity) as sp_bsp:
-        cond_p, _ = bsp.binary_search_perplexity(d2, config.perplexity)
+    bsp_impl = config.resolve_bsp_impl()
+    with timer.span("bsp", perplexity=config.perplexity, impl=bsp_impl) as sp_bsp:
+        cond_p, _ = bsp.binary_search_perplexity(
+            d2, config.perplexity, impl=bsp_impl
+        )
         sp_bsp.sync(cond_p)
 
     sp_sym_ctx = timer.span("symmetrize", layout=config.attractive_impl)
@@ -364,6 +383,7 @@ def preprocess(
         knn=sp_knn.duration_s, bsp=sp_bsp.duration_s,
         symmetrize=sp_sym.duration_s,
         neighbor_method=nb.name, n_neighbors=k,
+        bsp_impl=bsp_impl,
         knn_mean_d2=float(jnp.mean(d2)),
     )
 

@@ -2,10 +2,16 @@
 
 These re-export the core implementations — the kernels must agree with the
 library's own math to float tolerance across shape/dtype sweeps (see
-tests/test_kernels.py).
+tests/test_kernels.py).  The same pairings live in ``kernels/ops.KERNELS``
+(registry-style dispatch); this module is the flat import surface the
+parity tests and docs/KERNELS.md use.
 """
 from __future__ import annotations
 
 from repro.core._pairwise import pairwise_sq_dists  # noqa: F401
 from repro.core.attractive import attractive_forces_ell  # noqa: F401
+from repro.core.bsp import _binary_search_perplexity_xla as binary_search_perplexity  # noqa: F401
+from repro.core.fft_repulsion import (  # noqa: F401
+    gather_from_grid, interp_coords, spread_to_grid,
+)
 from repro.core.morton import morton_encode  # noqa: F401

@@ -1,0 +1,114 @@
+"""benchmarks/run.py --compare: delta computation + the regression-exit path."""
+import json
+
+import pytest
+
+from benchmarks import common
+from benchmarks import run as bench_run
+
+
+def _prev_doc(results, schema=2):
+    doc = dict(schema=schema, results=results)
+    if schema >= 2:
+        doc["git"] = dict(commit="deadbeefcafe", dirty=False)
+    return doc
+
+
+def _row(name, us):
+    return dict(name=name, us_per_call=us, derived="")
+
+
+@pytest.fixture
+def rows(monkeypatch):
+    """Isolate the module-global ROWS accumulator per test."""
+    monkeypatch.setattr(common, "ROWS", [])
+    return common.ROWS
+
+
+class TestCompareRuns:
+    def test_within_threshold_passes(self):
+        prev = _prev_doc([_row("a", 100.0), _row("b", 200.0)])
+        cur = [("a", 110.0, ""), ("b", 180.0, "")]
+        lines, regressions = common.compare_runs(prev, cur, threshold=0.25)
+        assert regressions == []
+        assert any("+10.0%" in ln for ln in lines)
+
+    def test_injected_regression_detected(self):
+        prev = _prev_doc([_row("a", 100.0), _row("b", 200.0)])
+        cur = [("a", 130.0, ""), ("b", 190.0, "")]  # a: +30% > 25%
+        lines, regressions = common.compare_runs(prev, cur, threshold=0.25)
+        assert len(regressions) == 1
+        name, p, us, delta = regressions[0]
+        assert name == "a" and p == 100.0 and us == 130.0
+        assert delta == pytest.approx(0.30)
+        assert any("REGRESSION" in ln for ln in lines)
+
+    def test_speedup_never_gates(self):
+        prev = _prev_doc([_row("a", 100.0)])
+        _, regressions = common.compare_runs(
+            prev, [("a", 10.0, "")], threshold=0.25)
+        assert regressions == []
+
+    def test_new_and_missing_benches_tolerated(self):
+        prev = _prev_doc([_row("gone", 50.0)])
+        lines, regressions = common.compare_runs(
+            prev, [("brand_new", 999999.0, "")], threshold=0.25)
+        assert regressions == []
+        assert any("NEW" in ln for ln in lines)
+        assert any("not run" in ln for ln in lines)
+
+    def test_schema_1_artifacts_comparable(self):
+        prev = _prev_doc([_row("a", 100.0)], schema=1)
+        _, regressions = common.compare_runs(
+            prev, [("a", 140.0, "")], threshold=0.25)
+        assert len(regressions) == 1
+
+
+class TestLoadBenchJson:
+    def test_roundtrip(self, tmp_path):
+        path = tmp_path / "BENCH_3.json"
+        path.write_text(json.dumps(_prev_doc([_row("a", 1.0)])))
+        doc = common.load_bench_json(path)
+        assert doc["results"][0]["name"] == "a"
+
+    def test_unknown_schema_rejected(self, tmp_path):
+        path = tmp_path / "BENCH_9.json"
+        path.write_text(json.dumps(dict(schema=99, results=[])))
+        with pytest.raises(ValueError, match="unsupported BENCH schema"):
+            common.load_bench_json(path)
+
+    def test_missing_results_rejected(self, tmp_path):
+        path = tmp_path / "BENCH_9.json"
+        path.write_text(json.dumps(dict(schema=2)))
+        with pytest.raises(ValueError, match="no results rows"):
+            common.load_bench_json(path)
+
+
+class TestCompareGate:
+    """run_compare_gate is the exact exit path main() sys.exit()s with."""
+
+    def test_regression_exits_nonzero(self, tmp_path, rows, capsys):
+        prev_path = tmp_path / "BENCH_0.json"
+        prev_path.write_text(json.dumps(_prev_doc(
+            [_row("steps_x", 100.0), _row("e2e_y", 1000.0)])))
+        common.emit("steps_x", 131.0)          # +31% -> regression
+        common.emit("e2e_y", 1001.0)
+        code = bench_run.run_compare_gate(str(prev_path), 0.25)
+        assert code == 1
+        err = capsys.readouterr().err
+        assert "FAIL" in err and "steps_x" in err and "+31.0%" in err
+
+    def test_clean_run_exits_zero(self, tmp_path, rows, capsys):
+        prev_path = tmp_path / "BENCH_0.json"
+        prev_path.write_text(json.dumps(_prev_doc([_row("steps_x", 100.0)])))
+        common.emit("steps_x", 101.0)
+        code = bench_run.run_compare_gate(str(prev_path), 0.25)
+        assert code == 0
+        assert "compare OK" in capsys.readouterr().err
+
+    def test_threshold_is_configurable(self, tmp_path, rows):
+        prev_path = tmp_path / "BENCH_0.json"
+        prev_path.write_text(json.dumps(_prev_doc([_row("steps_x", 100.0)])))
+        common.emit("steps_x", 110.0)          # +10%
+        assert bench_run.run_compare_gate(str(prev_path), 0.25) == 0
+        assert bench_run.run_compare_gate(str(prev_path), 0.05) == 1
