@@ -1,0 +1,26 @@
+"""Static-analysis suite: the compile-time half of the paper's methodology.
+
+PR 7/8 added the *runtime* instruments (phase spans, ``recompiles.*``
+probes, the roofline ranking); this package adds the *static* half — the
+bug classes the repo keeps paying for are checked at commit time:
+
+* :mod:`repro.analysis.retrace` — jit/retrace hazards (RT1xx);
+* :mod:`repro.analysis.kernel_contracts` — Pallas BlockSpec / grid /
+  VMEM contracts over ``kernels.ops.kernel_registry()`` (KC2xx);
+* :mod:`repro.analysis.concurrency` — lock discipline in the threaded
+  services (CC3xx);
+* :mod:`repro.analysis.findings` — codes, severities,
+  ``# repro-lint: disable=<code>`` pragmas, and the monotone baseline;
+* :mod:`repro.analysis.cli` — ``python -m repro.analysis [--gate]``.
+
+Finding codes and workflow are documented in docs/ANALYSIS.md.
+"""
+from repro.analysis.findings import (
+    CODES, Finding, Severity, apply_pragmas, fingerprints, gate,
+    load_baseline, save_baseline, scan_pragmas,
+)
+
+__all__ = [
+    "CODES", "Finding", "Severity", "apply_pragmas", "fingerprints",
+    "gate", "load_baseline", "save_baseline", "scan_pragmas",
+]

@@ -1,0 +1,254 @@
+"""Finding model shared by every analysis pass: codes, severities, pragmas,
+and the checked-in baseline.
+
+A :class:`Finding` is one diagnosed violation — a stable ``code`` (RT1xx
+retrace hazards, KC2xx kernel contract breaches, CC3xx concurrency lint),
+a severity from :data:`CODES`, a location, and a message/hint pair.  The
+pieces that make findings *actionable over time* also live here:
+
+* **pragmas** — ``# repro-lint: disable=RT101[,CC301|all]`` on the flagged
+  line (or the line directly above it) suppresses matching findings; the
+  scanner keeps them visible under ``--show-suppressed`` so waivers stay
+  auditable;
+* **baseline** — a JSON file of known-finding fingerprints.  The CI gate
+  fails on any finding *not* in the baseline, and ``--write-baseline``
+  only ever removes entries (``--allow-grow`` is the explicit override),
+  so the baseline shrinks monotonically toward zero.
+
+Fingerprints deliberately exclude line numbers — ``code:path:scope`` plus
+a per-scope occurrence index — so unrelated edits to a file don't churn
+the baseline.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import json
+import re
+from collections import Counter
+from pathlib import Path
+
+
+class Severity(enum.IntEnum):
+    INFO = 0
+    WARNING = 1
+    ERROR = 2
+
+    def __str__(self) -> str:  # "error" in reports, not "Severity.ERROR"
+        return self.name.lower()
+
+
+# code -> (severity, one-line title, generic fix hint)
+CODES: dict[str, tuple[Severity, str, str]] = {
+    "RT101": (
+        Severity.ERROR,
+        "host sync inside a jitted function",
+        "`.item()`, `float()`/`int()`/`bool()` on a traced value, "
+        "`np.asarray`/`np.array` of a traced value, and "
+        "`.block_until_ready()` force a device sync (or fail) at trace "
+        "time; keep the value on-device (jnp ops) or hoist the sync out "
+        "of the jitted function.",
+    ),
+    "RT102": (
+        Severity.ERROR,
+        "jax.jit created inside a function body",
+        "a jit wrapper built per call starts a fresh compile cache every "
+        "time — silent recompiles. Hoist the jitted function to module "
+        "scope, or store the wrapper once (e.g. on `self` in `__init__`).",
+    ),
+    "RT103": (
+        Severity.ERROR,
+        "non-hashable static argument",
+        "static_argnames entries must be hashable and order-stable; a "
+        "dict/list/set-valued static arg either raises or (if wrapped) "
+        "retraces per insertion order. Normalize to `tuple(sorted(...))` "
+        "the way `TsneConfig.neighbor_options` does.",
+    ),
+    "RT104": (
+        Severity.WARNING,
+        "time/random call inside a jitted function",
+        "`time.*` / `random.*` / `np.random.*` run once at trace time and "
+        "bake a constant into the compiled program. Use `jax.random` with "
+        "an explicit key, or pass the value in as an operand.",
+    ),
+    "RT105": (
+        Severity.WARNING,
+        "block_until_ready outside a Tracer span",
+        "raw `block_until_ready` syncs are invisible to the profile and "
+        "get misattributed; use `with tracer.span(...) as sp: sp.sync(x)` "
+        "so the wait is charged to the phase that launched the work.",
+    ),
+    "KC200": (
+        Severity.ERROR,
+        "kernel contract could not be captured",
+        "tracing the kernel entry point raised, or no pallas_call was "
+        "reached — the checker cannot vouch for this kernel's BlockSpecs.",
+    ),
+    "KC201": (
+        Severity.ERROR,
+        "grid/block does not tile the operand",
+        "block_shape must divide the (padded) operand shape on every axis "
+        "and the grid must cover every output block; pad the operand to a "
+        "tile multiple in the wrapper and slice the result (the "
+        "pad-then-slice idiom in docs/KERNELS.md).",
+    ),
+    "KC202": (
+        Severity.ERROR,
+        "index map escapes the operand bounds",
+        "an index_map result addresses a block beyond the operand extent "
+        "for some grid point; check the map against grid=(...) and the "
+        "padded shape.",
+    ),
+    "KC203": (
+        Severity.ERROR,
+        "ref/pallas output disagreement",
+        "the pure-jnp oracle and the Pallas path return different "
+        "shapes/dtypes for the same inputs; the wrapper must slice "
+        "padding off and preserve the oracle's dtype.",
+    ),
+    "KC204": (
+        Severity.ERROR,
+        "per-tile VMEM budget exceeded",
+        "the resident blocks of one grid step (x2 for double buffering) "
+        "overflow the ~16 MB/core VMEM budget at a shape the config "
+        "permits; shrink the tile or cap the offending config axis.",
+    ),
+    "CC301": (
+        Severity.ERROR,
+        "lock-inconsistent attribute access",
+        "an attribute mutated under a lock is also touched without it (or "
+        "vice versa) — either every cross-thread access takes the lock, "
+        "or the attribute is single-thread-owned and should never be "
+        "touched under the lock.",
+    ),
+    "CC302": (
+        Severity.ERROR,
+        "condition wait without a predicate loop",
+        "`Condition.wait()` must sit in a `while <predicate>:` loop — "
+        "wakeups are spurious and a bare or if-guarded wait() misses "
+        "them.",
+    ),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    code: str
+    path: str               # repo-relative POSIX path
+    line: int               # 1-based
+    message: str
+    scope: str = ""         # dotted qualname of the enclosing def/class
+    hint: str = ""          # finding-specific hint (falls back to CODES)
+    suppressed: bool = False
+
+    @property
+    def severity(self) -> Severity:
+        return CODES[self.code][0]
+
+    @property
+    def fix_hint(self) -> str:
+        return self.hint or CODES[self.code][2]
+
+    def format(self, fix_hints: bool = False) -> str:
+        where = f"{self.path}:{self.line}"
+        scope = f" [{self.scope}]" if self.scope else ""
+        sup = " (suppressed)" if self.suppressed else ""
+        out = f"{where}: {self.code} {self.severity}{sup}: {self.message}{scope}"
+        if fix_hints:
+            out += f"\n    hint: {self.fix_hint}"
+        return out
+
+
+def fingerprints(findings: list[Finding]) -> dict[str, Finding]:
+    """Stable, line-number-free identity per finding.
+
+    ``code:path:scope`` plus an occurrence index for repeats in the same
+    scope, so editing unrelated lines never churns the baseline.
+    """
+    seen: Counter = Counter()
+    out: dict[str, Finding] = {}
+    for f in sorted(findings, key=lambda f: (f.path, f.line, f.code)):
+        base = f"{f.code}:{f.path}:{f.scope}"
+        idx = seen[base]
+        seen[base] += 1
+        out[f"{base}#{idx}"] = f
+    return out
+
+
+# ---------------------------------------------------------------- pragmas --
+
+_PRAGMA_RE = re.compile(r"#\s*repro-lint:\s*disable=([A-Za-z0-9_,\s]+)")
+
+
+def scan_pragmas(source: str) -> dict[int, set[str]]:
+    """line (1-based) -> set of codes disabled on that line (or ``{"all"}``)."""
+    out: dict[int, set[str]] = {}
+    for i, text in enumerate(source.splitlines(), start=1):
+        m = _PRAGMA_RE.search(text)
+        if m:
+            out[i] = {c.strip() for c in m.group(1).split(",") if c.strip()}
+    return out
+
+
+def apply_pragmas(findings: list[Finding],
+                  pragmas: dict[int, set[str]]) -> list[Finding]:
+    """Mark findings suppressed by a pragma on their line or the line above."""
+    out = []
+    for f in findings:
+        codes = pragmas.get(f.line, set()) | pragmas.get(f.line - 1, set())
+        if f.code in codes or "all" in codes:
+            f = dataclasses.replace(f, suppressed=True)
+        out.append(f)
+    return out
+
+
+# --------------------------------------------------------------- baseline --
+
+BASELINE_VERSION = 1
+
+
+def load_baseline(path: Path) -> dict[str, dict]:
+    """fingerprint -> recorded metadata; a missing file is an empty baseline."""
+    if not path.exists():
+        return {}
+    doc = json.loads(path.read_text())
+    if doc.get("version") != BASELINE_VERSION:
+        raise ValueError(f"unsupported baseline version in {path}: "
+                         f"{doc.get('version')!r}")
+    return doc["findings"]
+
+
+def save_baseline(path: Path, findings: dict[str, Finding]) -> None:
+    doc = {
+        "version": BASELINE_VERSION,
+        "findings": {
+            fp: dict(code=f.code, path=f.path, scope=f.scope,
+                     message=f.message)
+            for fp, f in sorted(findings.items())
+        },
+    }
+    path.write_text(json.dumps(doc, indent=2, sort_keys=True) + "\n")
+
+
+@dataclasses.dataclass
+class GateResult:
+    """Outcome of comparing a scan against the baseline."""
+    new: dict[str, Finding]          # active findings not in the baseline
+    known: dict[str, Finding]        # active findings covered by it
+    stale: dict[str, dict]           # baseline entries that no longer fire
+
+    @property
+    def ok(self) -> bool:
+        return not self.new
+
+
+def gate(findings: list[Finding], baseline: dict[str, dict],
+         min_severity: Severity = Severity.WARNING) -> GateResult:
+    """Split active (unsuppressed, >= min_severity) findings by baseline."""
+    active = [f for f in findings
+              if not f.suppressed and f.severity >= min_severity]
+    fps = fingerprints(active)
+    new = {fp: f for fp, f in fps.items() if fp not in baseline}
+    known = {fp: f for fp, f in fps.items() if fp in baseline}
+    stale = {fp: meta for fp, meta in baseline.items() if fp not in fps}
+    return GateResult(new=new, known=known, stale=stale)

@@ -1,0 +1,360 @@
+"""AST pass for jit/retrace hazards (codes RT101-RT105).
+
+The bug classes this catches are the ones the repo has already paid for
+once each (PR 6's momentum-as-operand fix, the ``TRACE_LOG`` replacement,
+the ``neighbor_options`` hashability normalization):
+
+* **RT101** — host syncs inside a jitted function: ``.item()``,
+  ``float()``/``int()``/``bool()`` applied to a traced parameter,
+  ``np.asarray``/``np.array`` of a traced parameter, and
+  ``.block_until_ready()`` under ``jit``;
+* **RT102** — ``jax.jit`` applied inside a function body (a fresh wrapper
+  — and compile cache — per call), including jit-decorated defs nested in
+  a function, with the closure-captured Python scalars named (each
+  capture is baked at trace time: stale constants at best, a
+  retrace-per-value pattern when the closure is rebuilt);
+* **RT103** — ``static_argnames`` entries whose parameter is
+  dict/list/set-valued (unhashable, or insertion-order-sensitive when
+  wrapped) by default or annotation;
+* **RT104** — ``time.*`` / ``random.*`` / ``np.random.*`` calls under
+  ``jit`` (trace-time constants masquerading as runtime values);
+* **RT105** — ``block_until_ready`` outside a Tracer span anywhere in a
+  module (the sync happens, but the profile misattributes it; use
+  ``sp.sync``).
+
+Static findings are confirmable at runtime: every jitted hot path carries
+a :class:`repro.obs.RecompileProbe`, so a flagged retrace hazard shows up
+as a growing ``recompiles.*`` counter in service ``stats()`` snapshots.
+
+The pass is source -> findings (:func:`scan_source`); file iteration,
+pragma application, and baselines live in :mod:`repro.analysis.cli`.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.findings import Finding
+
+# module paths exempt from RT105 (they implement the tracer machinery)
+EXEMPT_PATH_PARTS = ("obs",)
+
+_HOST_CASTS = {"float", "int", "bool"}
+_NP_SYNC_FUNCS = {"asarray", "array"}
+_TIME_FUNCS = {"time", "perf_counter", "monotonic", "process_time",
+               "thread_time", "clock_gettime"}
+_MUTABLE_LITERALS = (ast.Dict, ast.List, ast.Set, ast.DictComp,
+                     ast.ListComp, ast.SetComp)
+_UNHASHABLE_ANNOT = ("dict", "Dict", "list", "List", "set", "Set",
+                     "Mapping", "MutableMapping")
+
+
+class _Aliases:
+    """Import names seen at module level, resolved to what we care about."""
+
+    def __init__(self, tree: ast.Module):
+        self.jax: set[str] = set()          # `import jax [as j]`
+        self.jit: set[str] = set()          # `from jax import jit [as j]`
+        self.np: set[str] = set()           # `import numpy [as np]`
+        self.partial: set[str] = set()      # `from functools import partial`
+        self.functools: set[str] = set()
+        self.time_mod: set[str] = set()
+        self.time_fn: set[str] = set()      # `from time import perf_counter`
+        self.random_mod: set[str] = set()
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    tgt = a.asname or a.name.split(".")[0]
+                    if a.name == "jax" or a.name.startswith("jax."):
+                        self.jax.add(tgt if a.asname or a.name == "jax"
+                                     else "jax")
+                    elif a.name == "numpy" or a.name.startswith("numpy."):
+                        self.np.add(tgt if a.asname or a.name == "numpy"
+                                    else "numpy")
+                    elif a.name == "functools":
+                        self.functools.add(tgt)
+                    elif a.name == "time":
+                        self.time_mod.add(tgt)
+                    elif a.name == "random":
+                        self.random_mod.add(tgt)
+            elif isinstance(node, ast.ImportFrom):
+                for a in node.names:
+                    tgt = a.asname or a.name
+                    if node.module == "jax" and a.name == "jit":
+                        self.jit.add(tgt)
+                    elif node.module == "functools" and a.name == "partial":
+                        self.partial.add(tgt)
+                    elif node.module == "time" and a.name in _TIME_FUNCS:
+                        self.time_fn.add(tgt)
+
+    # -- expression classifiers ------------------------------------------
+    def is_jit_expr(self, node: ast.expr) -> bool:
+        """``jax.jit`` / ``jit`` (by any imported alias)."""
+        if isinstance(node, ast.Name):
+            return node.id in self.jit
+        return (isinstance(node, ast.Attribute) and node.attr == "jit"
+                and isinstance(node.value, ast.Name)
+                and node.value.id in self.jax)
+
+    def is_partial_expr(self, node: ast.expr) -> bool:
+        if isinstance(node, ast.Name):
+            return node.id in self.partial
+        return (isinstance(node, ast.Attribute) and node.attr == "partial"
+                and isinstance(node.value, ast.Name)
+                and node.value.id in self.functools)
+
+    def is_np_attr(self, node: ast.expr, names: set[str]) -> bool:
+        return (isinstance(node, ast.Attribute) and node.attr in names
+                and isinstance(node.value, ast.Name)
+                and node.value.id in self.np)
+
+
+def _static_argnames(call: ast.Call) -> set[str]:
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            names: set[str] = set()
+            v = kw.value
+            if isinstance(v, ast.Constant) and isinstance(v.value, str):
+                names.add(v.value)
+            elif isinstance(v, (ast.Tuple, ast.List, ast.Set)):
+                for elt in v.elts:
+                    if isinstance(elt, ast.Constant) and isinstance(elt.value, str):
+                        names.add(elt.value)
+            return names
+    return set()
+
+
+def _jit_decoration(fn: ast.FunctionDef, al: _Aliases):
+    """(is_jitted, static_argnames) from the decorator list."""
+    for dec in fn.decorator_list:
+        if al.is_jit_expr(dec):
+            return True, set()
+        if isinstance(dec, ast.Call):
+            if al.is_jit_expr(dec.func):                   # @jax.jit(...)
+                return True, _static_argnames(dec)
+            if al.is_partial_expr(dec.func) and dec.args \
+                    and al.is_jit_expr(dec.args[0]):       # @partial(jax.jit)
+                return True, _static_argnames(dec)
+    return False, set()
+
+
+def _annotation_src(node: ast.expr | None) -> str:
+    return ast.unparse(node) if node is not None else ""
+
+
+def _all_params(fn: ast.FunctionDef) -> list[ast.arg]:
+    a = fn.args
+    return [*a.posonlyargs, *a.args, *a.kwonlyargs]
+
+
+def _param_defaults(fn: ast.FunctionDef) -> dict[str, ast.expr]:
+    """param name -> default expression (positional and keyword-only)."""
+    a = fn.args
+    out: dict[str, ast.expr] = {}
+    pos = [*a.posonlyargs, *a.args]
+    for arg, default in zip(pos[len(pos) - len(a.defaults):], a.defaults):
+        out[arg.arg] = default
+    for arg, default in zip(a.kwonlyargs, a.kw_defaults):
+        if default is not None:
+            out[arg.arg] = default
+    return out
+
+
+def _assigned_names(fn: ast.FunctionDef) -> set[str]:
+    """Names bound anywhere in ``fn``'s own body (locals for captures)."""
+    names = {a.arg for a in _all_params(fn)}
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Store):
+            names.add(node.id)
+    return names
+
+
+class _Scanner(ast.NodeVisitor):
+    def __init__(self, relpath: str, al: _Aliases):
+        self.relpath = relpath
+        self.al = al
+        self.findings: list[Finding] = []
+        self.scope: list[str] = []           # qualname parts
+        self.fn_stack: list[ast.FunctionDef] = []
+        # per-jitted-function context while inside one
+        self.jit_depth = 0
+        self.traced_params: set[str] = set()
+        self.span_depth = 0
+        self.exempt_sync = any(p in relpath.split("/")
+                               for p in EXEMPT_PATH_PARTS)
+        self._decorator_calls: set[int] = set()   # id() of decorator exprs
+
+    # ------------------------------------------------------------ helpers
+    def _emit(self, code: str, node: ast.AST, message: str):
+        self.findings.append(Finding(
+            code=code, path=self.relpath, line=node.lineno, message=message,
+            scope=".".join(self.scope)))
+
+    def _check_static_hashability(self, fn: ast.FunctionDef,
+                                  statics: set[str]):
+        defaults = _param_defaults(fn)
+        annots = {a.arg: _annotation_src(a.annotation)
+                  for a in _all_params(fn)}
+        for name in sorted(statics):
+            d = defaults.get(name)
+            if d is not None and (
+                    isinstance(d, _MUTABLE_LITERALS)
+                    or (isinstance(d, ast.Call) and isinstance(d.func, ast.Name)
+                        and d.func.id in ("dict", "list", "set"))):
+                self._emit("RT103", fn,
+                           f"static arg {name!r} of {fn.name!r} defaults to a "
+                           f"{type(d).__name__.lower()} — unhashable/"
+                           "insertion-ordered under jit")
+                continue
+            ann = annots.get(name, "")
+            if any(tok in ann.replace(" ", "").replace("|", ",").split(",")
+                   or ann.startswith(f"{tok}[") for tok in _UNHASHABLE_ANNOT):
+                self._emit("RT103", fn,
+                           f"static arg {name!r} of {fn.name!r} is annotated "
+                           f"{ann!r} — unhashable/insertion-ordered under jit")
+
+    def _captured_names(self, fn: ast.FunctionDef) -> list[str]:
+        """Loads in ``fn`` bound as locals of an enclosing function."""
+        if not self.fn_stack:
+            return []
+        enclosing: set[str] = set()
+        for outer in self.fn_stack:
+            enclosing |= _assigned_names(outer)
+        own = _assigned_names(fn)
+        loads = {n.id for n in ast.walk(fn)
+                 if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Load)}
+        return sorted((loads & enclosing) - own)
+
+    # ------------------------------------------------------------- visits
+    def visit_ClassDef(self, node: ast.ClassDef):
+        self.scope.append(node.name)
+        self.generic_visit(node)
+        self.scope.pop()
+
+    def _visit_function(self, node: ast.FunctionDef):
+        jitted, statics = _jit_decoration(node, self.al)
+        # decorators execute in the *enclosing* scope — visit them before
+        # entering the function so @partial(jax.jit, ...) on a module-level
+        # def is not mistaken for a jit call inside the function body
+        for dec in node.decorator_list:
+            self._decorator_calls.add(id(dec))
+            self.visit(dec)
+        self.scope.append(node.name)
+        if jitted:
+            self._check_static_hashability(node, statics)
+            if self.fn_stack and self.fn_stack[-1].name != "__init__":
+                caps = self._captured_names(node)
+                cap = (" (captures " + ", ".join(repr(c) for c in caps) + ")"
+                       if caps else "")
+                self._emit("RT102", node,
+                           f"jit-decorated {node.name!r} defined inside "
+                           f"{self.fn_stack[-1].name!r} — fresh compile "
+                           f"cache per call{cap}")
+        self.fn_stack.append(node)
+        if jitted:
+            self.jit_depth += 1
+            prev = self.traced_params
+            self.traced_params = {a.arg for a in _all_params(node)} \
+                - statics - {"self", "cls"}
+        for field, value in ast.iter_fields(node):
+            if field == "decorator_list":
+                continue
+            for child in (value if isinstance(value, list) else [value]):
+                if isinstance(child, ast.AST):
+                    self.visit(child)
+        if jitted:
+            self.jit_depth -= 1
+            self.traced_params = prev
+        self.fn_stack.pop()
+        self.scope.pop()
+
+    visit_FunctionDef = _visit_function
+    visit_AsyncFunctionDef = _visit_function
+
+    def visit_With(self, node: ast.With):
+        is_span = any(
+            isinstance(item.context_expr, ast.Call)
+            and ((isinstance(item.context_expr.func, ast.Attribute)
+                  and item.context_expr.func.attr in ("span", "trace"))
+                 or (isinstance(item.context_expr.func, ast.Name)
+                     and item.context_expr.func.id == "trace"))
+            for item in node.items)
+        if is_span:
+            self.span_depth += 1
+        self.generic_visit(node)
+        if is_span:
+            self.span_depth -= 1
+
+    def visit_Call(self, node: ast.Call):
+        al = self.al
+        func = node.func
+        in_jit = self.jit_depth > 0
+
+        # jit applied as an expression inside a function body (RT102);
+        # __init__ is the sanctioned place to build per-instance wrappers
+        if (al.is_jit_expr(func) or
+                (al.is_partial_expr(func) and node.args
+                 and al.is_jit_expr(node.args[0]))):
+            if self.fn_stack and self.fn_stack[-1].name != "__init__" \
+                    and id(node) not in self._decorator_calls:
+                self._emit("RT102", node,
+                           f"jax.jit(...) called inside "
+                           f"{self.fn_stack[-1].name!r} — fresh compile "
+                           "cache per call")
+
+        if isinstance(func, ast.Attribute):
+            if func.attr == "item" and not node.args and in_jit:
+                self._emit("RT101", node,
+                           ".item() inside a jitted function forces a "
+                           "host sync")
+            elif func.attr == "block_until_ready":
+                if in_jit:
+                    self._emit("RT101", node,
+                               "block_until_ready inside a jitted function")
+                elif self.span_depth == 0 and not self.exempt_sync:
+                    self._emit("RT105", node,
+                               "block_until_ready outside a Tracer span — "
+                               "sync is invisible to the profile")
+            elif in_jit and al.is_np_attr(func, _NP_SYNC_FUNCS) and node.args \
+                    and isinstance(node.args[0], ast.Name) \
+                    and node.args[0].id in self.traced_params:
+                self._emit("RT101", node,
+                           f"np.{func.attr}({node.args[0].id}) materializes a "
+                           "traced value on host inside a jitted function")
+            elif in_jit and isinstance(func.value, ast.Name):
+                base = func.value.id
+                if base in al.time_mod and func.attr in _TIME_FUNCS:
+                    self._emit("RT104", node,
+                               f"time.{func.attr}() under jit is a "
+                               "trace-time constant")
+                elif base in al.random_mod:
+                    self._emit("RT104", node,
+                               f"random.{func.attr}() under jit is a "
+                               "trace-time constant; use jax.random")
+            if (in_jit and isinstance(func.value, ast.Attribute)
+                    and func.value.attr == "random"
+                    and isinstance(func.value.value, ast.Name)
+                    and func.value.value.id in al.np):
+                self._emit("RT104", node,
+                           f"np.random.{func.attr}() under jit is a "
+                           "trace-time constant; use jax.random")
+        elif isinstance(func, ast.Name):
+            if in_jit and func.id in _HOST_CASTS and len(node.args) == 1 \
+                    and isinstance(node.args[0], ast.Name) \
+                    and node.args[0].id in self.traced_params:
+                self._emit("RT101", node,
+                           f"{func.id}({node.args[0].id}) on a traced "
+                           "parameter forces a host sync inside a jitted "
+                           "function")
+            elif in_jit and func.id in al.time_fn:
+                self._emit("RT104", node,
+                           f"{func.id}() under jit is a trace-time constant")
+        self.generic_visit(node)
+
+
+def scan_source(source: str, relpath: str) -> list[Finding]:
+    """Run the retrace pass over one module's source."""
+    tree = ast.parse(source, filename=relpath)
+    al = _Aliases(tree)
+    sc = _Scanner(relpath, al)
+    sc.visit(tree)
+    return sc.findings

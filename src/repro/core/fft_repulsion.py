@@ -28,6 +28,14 @@ import jax.numpy as jnp
 
 P_ORDER = 3  # interpolation nodes per box per dim (cubic-ish accuracy)
 
+# Hard cap on the boxes-per-dim grid resolution.  The Pallas interp kernels
+# keep the whole [C, G, G] node lattice VMEM-resident per grid step, so the
+# lattice (G = 2*n_boxes+1 padded to the 128-lane boundary) must stay inside
+# the ~16 MB budget; `repro.analysis` certifies the BlockSpecs at exactly
+# this envelope.  FIt-SNE-style accuracy needs ~50-100 boxes — 128 is head
+# room, not a constraint.
+MAX_N_BOXES = 128
+
 INTERP_IMPLS = ("xla", "pallas")
 
 
@@ -102,6 +110,11 @@ def fft_repulsion(y: jax.Array, n_boxes: int = 48, interp_impl: str = "xla"):
     oracles above) or "pallas" (tiled one-hot-matmul kernels, interpret-mode
     on CPU).
     """
+    if not 1 <= n_boxes <= MAX_N_BOXES:
+        raise ValueError(
+            f"n_boxes={n_boxes} outside [1, {MAX_N_BOXES}] — the interp "
+            "kernels keep the whole node lattice VMEM-resident (MAX_N_BOXES)"
+        )
     if interp_impl == "pallas":
         from repro.kernels.ops import fft_gather, fft_spread
         spread, gather = fft_spread, fft_gather

@@ -80,7 +80,7 @@ def morton_encode(
         raise ValueError(f"depth must be in [1, 16] for uint32 codes, got {depth}")
     y_root = cent - r_span                      # Alg.1 line 4
     scale = (2.0 ** (depth - 1)) / r_span       # Alg.1 line 5 (2^31/r -> 2^(d-1)/r)
-    m = (y - y_root) * scale.astype(y.dtype)
+    m = (y - y_root[None, :]) * scale.astype(y.dtype)
     m = jnp.clip(m, 0.0, float(2**depth) - 1.0).astype(jnp.uint32)
     mx = expand_bits_u32(m[..., 0])
     my = expand_bits_u32(m[..., 1])

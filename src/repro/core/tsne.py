@@ -37,6 +37,13 @@ TSNE_STEP_RETRACES = obs.RecompileProbe("tsne_step")
 # and the barnes_hut backend all default to this constant.
 DEFAULT_ATTRACTIVE_IMPL = "blocked"
 
+# Hard cap on the resolved neighbor width K.  The ELL layouts and the Pallas
+# tile budgets ([256, K] blocks resident in ~16 MB VMEM) are sized for this
+# envelope, and `repro.analysis` certifies the kernel contracts exactly at
+# it.  K = 3*perplexity, so this admits perplexity up to ~341 — far beyond
+# any published t-SNE setting.
+MAX_N_NEIGHBORS = 1024
+
 
 @dataclasses.dataclass(frozen=True)
 class TsneConfig:
@@ -92,7 +99,7 @@ class TsneConfig:
     def resolve_n_neighbors(self, n: int) -> int:
         k = int(3.0 * self.perplexity) if self.n_neighbors is None \
             else int(self.n_neighbors)
-        return max(1, min(k, n - 1))
+        return max(1, min(k, n - 1, MAX_N_NEIGHBORS))
 
     def resolve_neighbor_options(self) -> dict:
         """Backend options with config-level defaults folded in."""

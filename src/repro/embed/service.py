@@ -22,6 +22,7 @@ Smoke entry point (CI):  PYTHONPATH=src python -m repro.embed.service --smoke
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from collections import deque
 
@@ -94,6 +95,11 @@ class EmbeddingService:
         self.metrics = metrics if metrics is not None else obs.MetricsRegistry()
         self.tracer = tracer if tracer is not None else obs.get_tracer()
         self._models: dict[str, object] = {}       # name -> fitted TSNE
+        # `queue` and `completed` are the cross-thread surfaces (submit()
+        # and stats() may run off the engine thread) and are guarded by
+        # `_lock`; `active` / `_state` / `_steps` / `ticks` are engine-
+        # thread-owned and deliberately unguarded.
+        self._lock = threading.Lock()
         self.queue: deque[TransformRequest] = deque()
         self.active: list[TransformRequest | None] = [None] * slots
         self.completed: list[TransformRequest] = []
@@ -141,8 +147,10 @@ class EmbeddingService:
                 f"{', '.join(self.models()) or '(none)'}"
             )
         req.submitted_at = time.perf_counter()
-        self.queue.append(req)
-        self.metrics.gauge("service.queue_depth").set(len(self.queue))
+        with self._lock:
+            self.queue.append(req)
+            depth = len(self.queue)
+        self.metrics.gauge("service.queue_depth").set(depth)
 
     def _admit(self, slot: int, req: TransformRequest) -> None:
         """Query + perplexity search + init for one request, into ``slot``."""
@@ -172,8 +180,13 @@ class EmbeddingService:
 
     def _refill(self) -> None:
         for s in range(self.slots):
-            if self.active[s] is None and self.queue:
-                self._admit(s, self.queue.popleft())
+            if self.active[s] is None:
+                # pop under the lock, admit (slow: device work) outside it
+                with self._lock:
+                    if not self.queue:
+                        break
+                    req = self.queue.popleft()
+                self._admit(s, req)
 
     # -------------------------------------------------------------- loop --
 
@@ -184,7 +197,9 @@ class EmbeddingService:
         self._refill()
         active_mask = np.array([r is not None for r in self.active])
         m = self.metrics
-        m.gauge("service.queue_depth").set(len(self.queue))
+        with self._lock:
+            depth = len(self.queue)
+        m.gauge("service.queue_depth").set(depth)
         m.gauge("service.slot_occupancy").set(int(active_mask.sum()))
         if not active_mask.any():
             return False
@@ -217,7 +232,8 @@ class EmbeddingService:
                 req.grad_norm = float(gn[s])
                 req.done = True
                 req.finished_at = time.perf_counter()
-                self.completed.append(req)
+                with self._lock:
+                    self.completed.append(req)
                 self.active[s] = None
                 m.counter("service.completed").inc()
                 m.histogram("service.latency_s").observe(req.latency_s)
@@ -230,13 +246,18 @@ class EmbeddingService:
 
     def run(self, max_ticks: int = 100_000) -> list[TransformRequest]:
         """Drain the queue; returns the requests completed by this call."""
-        n_done = len(self.completed)
+        with self._lock:
+            n_done = len(self.completed)
         ticks = 0
-        while (self.queue or any(r is not None for r in self.active)) \
-                and ticks < max_ticks:
+        while ticks < max_ticks:
+            with self._lock:
+                pending = bool(self.queue)
+            if not pending and all(r is None for r in self.active):
+                break
             self.step()
             ticks += 1
-        return self.completed[n_done:]
+        with self._lock:
+            return self.completed[n_done:]
 
     # ------------------------------------------------------------- stats --
 
@@ -247,10 +268,20 @@ class EmbeddingService:
         and ``service.steps`` histograms maintained at retirement (p50 / p95
         / p99 over the retained window; count / mean / max exact), instead
         of re-sorting every completed request on each call.  Queue-depth and
-        slot-occupancy high-water marks come from the gauges."""
-        done = len(self.completed)
+        slot-occupancy high-water marks come from the gauges.
+
+        ``recompiles`` surfaces every ``recompiles.*`` probe counter (the
+        jitted ``transform_step`` carries one), so compile churn — the
+        runtime confirmation of a static RT1xx finding — is visible in the
+        same snapshot as the latency it explains."""
+        from repro.obs import get_metrics
+        recompiles = get_metrics().counter_values("recompiles.")
+        with self._lock:
+            done = len(self.completed)
+            queued = len(self.queue)
+            datasets = sorted({r.dataset for r in self.completed})
         if not done:
-            return dict(completed=0, ticks=self.ticks)
+            return dict(completed=0, ticks=self.ticks, recompiles=recompiles)
         lat = self.metrics.histogram("service.latency_s")
         steps = self.metrics.histogram("service.steps")
         occ = self.metrics.gauge("service.slot_occupancy")
@@ -258,8 +289,9 @@ class EmbeddingService:
         return dict(
             completed=done,
             ticks=self.ticks,
-            queued=len(self.queue),
-            datasets=sorted({r.dataset for r in self.completed}),
+            queued=queued,
+            datasets=datasets,
+            recompiles=recompiles,
             latency_s_mean=lat.mean,
             latency_s_p50=lat.percentile(50),
             latency_s_p95=lat.percentile(95),

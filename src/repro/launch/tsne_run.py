@@ -8,6 +8,24 @@
 from __future__ import annotations
 
 import argparse
+import functools
+
+import jax
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "mesh", "theta", "exag", "mom", "lr", "min_gain"))
+def _dist_step(state, cols, vals, *, mesh, theta, exag, mom, lr, min_gain):
+    """One sharded GD step.  Module-level so the compile cache is shared
+    across iterations; ``cols``/``vals`` are operands (not closure
+    captures baked into the jaxpr as constants).  (exag, mom) take two
+    values each over a run — at most 4 traces."""
+    from repro.core.distributed import distributed_bh_gradient
+    from repro.core.tsne import gd_update
+
+    res = distributed_bh_gradient(mesh, state.y, cols, vals, 0.0,
+                                  theta=theta, exaggeration=exag)
+    return gd_update(state, res.grad, lr, mom, min_gain), res.kl
 
 
 def main():
@@ -24,14 +42,13 @@ def main():
     ap.add_argument("--out", default="tsne_out.npy")
     args = ap.parse_args()
 
-    import jax
     import jax.numpy as jnp
     import numpy as np
     from repro.api import TSNE
     from repro.core import bsp
     from repro.core.knn import knn
     from repro.core.similarity import symmetrize_ell
-    from repro.core.tsne import TsneConfig, init_state, gd_update
+    from repro.core.tsne import TsneConfig, init_state
     from repro.data.datasets import make_dataset
 
     x, _ = make_dataset(args.dataset, n=args.n)
@@ -46,7 +63,7 @@ def main():
         return
 
     # distributed path: points sharded over a 1-D data mesh
-    from repro.core.distributed import distributed_bh_gradient, ring_knn
+    from repro.core.distributed import ring_knn
     mesh = jax.make_mesh((args.devices,), ("data",))
     n = args.n - args.n % args.devices
     x = jnp.asarray(x[:n])
@@ -59,20 +76,12 @@ def main():
     state = init_state(n, cfg)
     lr = cfg.resolve_lr(n)
 
-    import functools
-
-    @functools.partial(jax.jit, static_argnames=("exag", "mom"))
-    def step(state, exag: float, mom: float):
-        # exaggeration scales only the attractive term — handled inside;
-        # (exag, mom) take 2 values each over a run: at most 4 traces
-        res = distributed_bh_gradient(mesh, state.y, cols, vals, 0.0,
-                                      theta=cfg.theta, exaggeration=exag)
-        return gd_update(state, res.grad, lr, mom, cfg.min_gain), res.kl
-
     for it in range(args.iters):
         exag = cfg.early_exaggeration if it < cfg.exaggeration_iters else 1.0
         mom = cfg.momentum_initial if it < cfg.momentum_switch_iter else cfg.momentum_final
-        state, kl = step(state, exag, mom)
+        state, kl = _dist_step(state, cols, vals, mesh=mesh, theta=cfg.theta,
+                               exag=exag, mom=mom, lr=lr,
+                               min_gain=cfg.min_gain)
         if (it + 1) % 100 == 0:
             print(f"iter {it+1} KL {float(kl):.4f}")
     np.save(args.out, np.asarray(state.y))

@@ -168,6 +168,12 @@ class MetricsRegistry:
             h = self._histograms[name] = Histogram(name, max_samples)
         return h
 
+    def counter_values(self, prefix: str = "") -> dict:
+        """Current values of counters whose name starts with ``prefix``
+        (e.g. ``counter_values("recompiles.")`` -> per-probe trace counts)."""
+        return {name: c.value for name, c in sorted(self._counters.items())
+                if name.startswith(prefix)}
+
     def merge(self, other: "MetricsRegistry") -> "MetricsRegistry":
         """Fold ``other`` in: counters add, gauges take other's last set
         value (high-water marks max), histograms pool retained samples."""

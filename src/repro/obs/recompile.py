@@ -56,16 +56,19 @@ class RecompileProbe:
     @property
     def count(self) -> int:
         """Distinct compiled variants seen (unique trace keys)."""
-        return len(self._keys)
+        with self._lock:
+            return len(self._keys)
 
     @property
     def calls(self) -> int:
         """Total trace events, including re-traces of seen keys."""
-        return self._calls
+        with self._lock:
+            return self._calls
 
     @property
     def keys(self) -> frozenset:
-        return frozenset(self._keys)
+        with self._lock:
+            return frozenset(self._keys)
 
     def reset(self) -> None:
         with self._lock:

@@ -186,13 +186,19 @@ class Tracer:
         with self._lock:
             self.spans.clear()
 
+    def _snapshot(self) -> list[Span]:
+        """Consistent copy of the completed spans (``_pop`` appends from
+        worker threads under the same lock)."""
+        with self._lock:
+            return list(self.spans)
+
     # ----------------------------------------------------------- inspect --
 
     def find(self, name: str) -> list[Span]:
-        return [s for s in self.spans if s.name == name]
+        return [s for s in self._snapshot() if s.name == name]
 
     def last(self, name: str) -> Span | None:
-        for s in reversed(self.spans):
+        for s in reversed(self._snapshot()):
             if s.name == name:
                 return s
         return None
@@ -200,7 +206,7 @@ class Tracer:
     def durations(self) -> dict[str, float]:
         """Total seconds per span name (summed over occurrences)."""
         out: dict[str, float] = {}
-        for s in self.spans:
+        for s in self._snapshot():
             out[s.name] = out.get(s.name, 0.0) + s.duration_s
         return out
 
@@ -210,7 +216,7 @@ class Tracer:
         """One JSON object per completed span (ts/dur in seconds, relative
         to the tracer epoch)."""
         with open(path, "w") as f:
-            for s in self.spans:
+            for s in self._snapshot():
                 d = s.to_dict()
                 d["ts"] = d["ts"] - self.t_epoch
                 f.write(json.dumps(d) + "\n")
@@ -225,7 +231,7 @@ class Tracer:
             name="process_name", ph="M", pid=pid, tid=0,
             args=dict(name=process_name),
         )]
-        for s in sorted(self.spans, key=lambda s: s.t0):
+        for s in sorted(self._snapshot(), key=lambda s: s.t0):
             ev = dict(
                 name=s.name, ph="X", pid=pid, tid=0, cat="phase",
                 ts=round((s.t0 - self.t_epoch) * 1e6, 3),

@@ -9,6 +9,7 @@ same engine drives the decode-shape dry-run cells at production scale.
 from __future__ import annotations
 
 import dataclasses
+import threading
 from collections import deque
 from typing import Any
 
@@ -48,6 +49,10 @@ class ServeEngine:
         self.eos_id = eos_id
         self.greedy = greedy
         self.key = jax.random.PRNGKey(seed)
+        # `queue` / `completed` may be touched from outside the engine
+        # thread (submit while run() drains) — guarded by `_lock`.  Slot
+        # state (`active`, `pos`, `next_token`, `cache`) is engine-owned.
+        self._lock = threading.Lock()
         self.queue: deque[Request] = deque()
         self.active: list[Request | None] = [None] * batch_slots
         self.pos = np.zeros(batch_slots, np.int32)
@@ -57,12 +62,16 @@ class ServeEngine:
         self.completed: list[Request] = []
 
     def submit(self, req: Request):
-        self.queue.append(req)
+        with self._lock:
+            self.queue.append(req)
 
     def _refill(self):
         for s in range(self.slots):
-            if self.active[s] is None and self.queue:
-                req = self.queue.popleft()
+            if self.active[s] is None:
+                with self._lock:
+                    if not self.queue:
+                        break
+                    req = self.queue.popleft()
                 self.active[s] = req
                 # prefill-by-decode: feed prompt tokens one at a time into
                 # this slot's cache rows (keeps a single compiled step fn)
@@ -79,7 +88,9 @@ class ServeEngine:
             )
         self._refill()
         occupancy = sum(a is not None for a in self.active)
-        self.metrics.gauge("serve.queue_depth").set(len(self.queue))
+        with self._lock:
+            depth = len(self.queue)
+        self.metrics.gauge("serve.queue_depth").set(depth)
         self.metrics.gauge("serve.slot_occupancy").set(occupancy)
         if occupancy == 0:
             return False
@@ -105,7 +116,8 @@ class ServeEngine:
                len(req.generated) >= req.max_new_tokens or \
                self.pos[s] >= self.max_seq - 1:
                 req.done = True
-                self.completed.append(req)
+                with self._lock:
+                    self.completed.append(req)
                 self.active[s] = None
                 self.metrics.counter("serve.completed").inc()
                 self.metrics.histogram("serve.request_tokens").observe(
@@ -116,10 +128,15 @@ class ServeEngine:
         if params is not None:
             self.model_params = params
         ticks = 0
-        while (self.queue or any(a is not None for a in self.active)) and ticks < max_ticks:
+        while ticks < max_ticks:
+            with self._lock:
+                pending = bool(self.queue)
+            if not pending and all(a is None for a in self.active):
+                break
             self.step()
             ticks += 1
-        return self.completed
+        with self._lock:
+            return list(self.completed)
 
     def stats(self) -> dict:
         """Telemetry snapshot (counters, gauge high-water marks, token

@@ -1,0 +1,31 @@
+"""Fixture: lock-discipline violations (scanned by tests, never imported)."""
+import threading
+
+
+class LeakyQueue:
+    """self.items is written under the lock in put() but mutated without
+    it in take(); self.done is read under the lock but written outside."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._cv = threading.Condition()
+        self.items = []
+        self.done = 0
+
+    def put(self, x):
+        with self._lock:
+            self.items.append(x)
+
+    def take(self):
+        return self.items.pop()          # CC301: unlocked write
+
+    def finish(self):
+        self.done += 1                   # CC301: unlocked write, read locked
+
+    def n_done(self):
+        with self._lock:
+            return self.done
+
+    def wait_any(self):
+        with self._cv:
+            self._cv.wait()              # CC302: no while-predicate loop

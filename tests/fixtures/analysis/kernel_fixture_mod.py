@@ -1,0 +1,66 @@
+"""Fixture kernels with deliberately broken BlockSpecs.
+
+Exposes ``kernel_cases()`` for ``python -m repro.analysis --kernels-from``
+(and direct use from tests): each case trips exactly one KC2xx check.
+"""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _copy(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def vmem_blowout(x):
+    """No specs at all: the whole 64 MB operand is one resident block."""
+    return pl.pallas_call(
+        _copy,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=True,
+    )(x)
+
+
+def oob_index_map(x):
+    """Input index map walks one block past the end of the operand."""
+    return pl.pallas_call(
+        _copy,
+        grid=(4,),
+        in_specs=[pl.BlockSpec((128, 128), lambda i: (i + 1, 0))],
+        out_specs=pl.BlockSpec((128, 128), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((512, 128), jnp.float32),
+        interpret=True,
+    )(x)
+
+
+def ragged_tiles(x):
+    """Block height 100 does not divide the 320-row operand."""
+    return pl.pallas_call(
+        _copy,
+        grid=(3,),
+        in_specs=[pl.BlockSpec((100, 128), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((100, 128), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((320, 128), jnp.float32),
+        interpret=True,
+    )(x)
+
+
+def uncovered_output(x):
+    """Grid of 2 writes half the 4-block output; the rest stays garbage."""
+    return pl.pallas_call(
+        _copy,
+        grid=(2,),
+        in_specs=[pl.BlockSpec((128, 128), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((128, 128), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((512, 128), jnp.float32),
+        interpret=True,
+    )(x)
+
+
+def kernel_cases():
+    s = jax.ShapeDtypeStruct
+    f32 = jnp.float32
+    yield "vmem_blowout", vmem_blowout, (s((4096, 4096), f32),), {}
+    yield "oob_index_map", oob_index_map, (s((512, 128), f32),), {}
+    yield "ragged_tiles", ragged_tiles, (s((320, 128), f32),), {}
+    yield "uncovered_output", uncovered_output, (s((512, 128), f32),), {}

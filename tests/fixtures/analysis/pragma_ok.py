@@ -1,0 +1,9 @@
+"""Fixture: the same RT102 hazard as retrace_bad, waived by pragma."""
+import jax
+
+
+def build_and_call(y):
+    @jax.jit  # repro-lint: disable=RT102
+    def inner(z):
+        return z + y
+    return inner(y)

@@ -1,0 +1,38 @@
+"""Fixture: one violation per RT1xx code (scanned by tests, never imported)."""
+import functools
+import time
+
+import jax
+import numpy as np
+
+
+@jax.jit
+def host_sync_item(x):
+    return x.item()                      # RT101: host sync under jit
+
+
+@jax.jit
+def host_sync_cast(x):
+    return float(x) + np.asarray(x)      # RT101 x2: cast + materialize
+
+
+@functools.partial(jax.jit, static_argnames=("opts",))
+def unhashable_static(x, opts: dict = {}):   # RT103: dict-valued static
+    return x
+
+
+@jax.jit
+def trace_time_clock(x):
+    return x * time.time()               # RT104: constant baked at trace
+
+
+def build_and_call(y):
+    @jax.jit                             # RT102: fresh compile cache per call
+    def inner(z):
+        return z + y
+    return inner(y)
+
+
+def unattributed_sync(x):
+    x.block_until_ready()                # RT105: sync outside a Tracer span
+    return x

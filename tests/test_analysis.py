@@ -1,0 +1,256 @@
+"""repro.analysis: pass correctness on fixtures, gate/baseline workflow,
+and the self-check that the shipped tree is clean against the committed
+baseline."""
+import json
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import concurrency, findings as fmod, retrace
+from repro.analysis.cli import DEFAULT_BASELINE, DEFAULT_SCAN, main
+from repro.analysis.findings import Severity
+
+FIXTURES = Path(__file__).parent / "fixtures" / "analysis"
+
+
+def scan_fixture(mod, name):
+    src = (FIXTURES / name).read_text()
+    return mod.scan_source(src, f"tests/fixtures/analysis/{name}")
+
+
+# ------------------------------------------------------------- retrace -----
+class TestRetrace:
+    def test_every_code_fires(self):
+        found = scan_fixture(retrace, "retrace_bad.py")
+        assert {f.code for f in found} == {
+            "RT101", "RT102", "RT103", "RT104", "RT105"}
+
+    def test_locations_and_scopes(self):
+        by_code = {}
+        for f in scan_fixture(retrace, "retrace_bad.py"):
+            by_code.setdefault(f.code, []).append(f)
+        src = (FIXTURES / "retrace_bad.py").read_text().splitlines()
+        item = next(f for f in by_code["RT101"] if ".item" in f.message)
+        assert "x.item()" in src[item.line - 1]
+        assert item.scope == "host_sync_item"
+        assert len(by_code["RT101"]) == 3        # .item, float(), np.asarray
+        (rt103,) = by_code["RT103"]
+        assert rt103.scope == "unhashable_static"
+        (rt102,) = by_code["RT102"]
+        assert "inner" in rt102.message and "build_and_call" in rt102.message
+        (rt105,) = by_code["RT105"]
+        assert "block_until_ready" in src[rt105.line - 1]
+
+    def test_severities(self):
+        found = scan_fixture(retrace, "retrace_bad.py")
+        sev = {f.code: f.severity for f in found}
+        assert sev["RT101"] == Severity.ERROR
+        assert sev["RT104"] == Severity.WARNING
+
+    def test_module_level_jit_decoration_not_flagged(self):
+        src = ("import jax, functools\n"
+               "@functools.partial(jax.jit, static_argnames=('k',))\n"
+               "def fine(x, k: int = 2):\n"
+               "    return x * k\n")
+        assert retrace.scan_source(src, "m.py") == []
+
+    def test_init_jit_sanctioned(self):
+        src = ("import jax\n"
+               "class Engine:\n"
+               "    def __init__(self, model):\n"
+               "        self._step = jax.jit(model.step)\n")
+        assert retrace.scan_source(src, "m.py") == []
+
+
+# --------------------------------------------------------- concurrency -----
+class TestConcurrency:
+    def test_codes_and_sites(self):
+        found = scan_fixture(concurrency, "concurrency_bad.py")
+        cc301 = [f for f in found if f.code == "CC301"]
+        cc302 = [f for f in found if f.code == "CC302"]
+        assert {f.scope for f in cc301} == {
+            "LeakyQueue.take", "LeakyQueue.finish"}
+        assert len(cc302) == 1 and cc302[0].scope == "LeakyQueue.wait_any"
+
+    def test_lockless_class_is_silent(self):
+        src = ("class Plain:\n"
+               "    def __init__(self):\n"
+               "        self.items = []\n"
+               "    def put(self, x):\n"
+               "        self.items.append(x)\n")
+        assert concurrency.scan_source(src, "m.py") == []
+
+    def test_consistent_locking_is_silent(self):
+        src = ("import threading\n"
+               "class Good:\n"
+               "    def __init__(self):\n"
+               "        self._lock = threading.Lock()\n"
+               "        self.items = []\n"
+               "    def put(self, x):\n"
+               "        with self._lock:\n"
+               "            self.items.append(x)\n"
+               "    def size(self):\n"
+               "        with self._lock:\n"
+               "            return len(self.items)\n")
+        assert concurrency.scan_source(src, "m.py") == []
+
+    def test_wait_in_while_is_silent(self):
+        src = ("import threading\n"
+               "class Good:\n"
+               "    def __init__(self):\n"
+               "        self._cv = threading.Condition()\n"
+               "        self.ready = False\n"
+               "    def wait_ready(self):\n"
+               "        with self._cv:\n"
+               "            while not self.ready:\n"
+               "                self._cv.wait()\n")
+        assert not [f for f in concurrency.scan_source(src, "m.py")
+                    if f.code == "CC302"]
+
+
+# ------------------------------------------------------------- pragmas -----
+class TestPragmas:
+    def test_pragma_suppresses(self):
+        src = (FIXTURES / "pragma_ok.py").read_text()
+        found = fmod.apply_pragmas(
+            retrace.scan_source(src, "pragma_ok.py"), fmod.scan_pragmas(src))
+        assert len(found) == 1 and found[0].code == "RT102"
+        assert found[0].suppressed
+
+    def test_suppressed_findings_do_not_gate(self):
+        src = (FIXTURES / "pragma_ok.py").read_text()
+        found = fmod.apply_pragmas(
+            retrace.scan_source(src, "pragma_ok.py"), fmod.scan_pragmas(src))
+        assert fmod.gate(found, {}).ok
+
+    def test_wrong_code_does_not_suppress(self):
+        src = (FIXTURES / "pragma_ok.py").read_text().replace(
+            "disable=RT102", "disable=RT101")
+        found = fmod.apply_pragmas(
+            retrace.scan_source(src, "pragma_ok.py"), fmod.scan_pragmas(src))
+        assert not found[0].suppressed
+
+
+# ---------------------------------------------------- kernel contracts -----
+class TestKernelContracts:
+    @pytest.fixture(scope="class")
+    def cases(self):
+        import sys
+        sys.path.insert(0, str(FIXTURES))
+        try:
+            import kernel_fixture_mod
+            return {name: (fn, args, kwargs)
+                    for name, fn, args, kwargs
+                    in kernel_fixture_mod.kernel_cases()}
+        finally:
+            sys.path.remove(str(FIXTURES))
+
+    @pytest.mark.parametrize("case,code", [
+        ("vmem_blowout", "KC204"),
+        ("oob_index_map", "KC202"),
+        ("ragged_tiles", "KC201"),
+        ("uncovered_output", "KC201"),
+    ])
+    def test_bad_blockspec_rejected(self, cases, case, code):
+        from repro.analysis.kernel_contracts import check_kernel_callable
+        fn, args, kwargs = cases[case]
+        found = check_kernel_callable(case, fn, args, kwargs)
+        assert code in {f.code for f in found}, \
+            [f.format() for f in found]
+
+    def test_registry_all_entries_clean(self):
+        from repro.analysis.kernel_contracts import check_registry
+        from repro.kernels.ops import kernel_registry
+        assert set(kernel_registry()) == {
+            "morton_encode", "pairwise_sq_dists", "attractive_ell",
+            "bsp_search", "fft_spread", "fft_gather"}
+        assert check_registry() == []
+
+    def test_unreachable_pallas_is_kc200(self):
+        import jax.numpy as jnp
+        import jax
+        from repro.analysis.kernel_contracts import check_kernel_callable
+        found = check_kernel_callable(
+            "plain", jnp.sin, (jax.ShapeDtypeStruct((8,), jnp.float32),))
+        assert [f.code for f in found] == ["KC200"]
+
+
+# ------------------------------------------------------ gate / baseline ----
+class TestGateWorkflow:
+    def test_fingerprints_ignore_line_numbers(self):
+        src = (FIXTURES / "retrace_bad.py").read_text()
+        shifted = "# padding\n# padding\n" + src
+        a = fmod.fingerprints(retrace.scan_source(src, "f.py"))
+        b = fmod.fingerprints(retrace.scan_source(shifted, "f.py"))
+        assert set(a) == set(b)
+
+    def test_baseline_roundtrip_and_gate(self, tmp_path):
+        found = scan_fixture(retrace, "retrace_bad.py")
+        assert not fmod.gate(found, {}).ok
+        path = tmp_path / "baseline.json"
+        fmod.save_baseline(path, fmod.fingerprints(found))
+        baseline = fmod.load_baseline(path)
+        result = fmod.gate(found, baseline)
+        assert result.ok and not result.stale
+        # fixing a finding turns its entry stale, never a failure
+        fewer = [f for f in found if f.code != "RT104"]
+        result = fmod.gate(fewer, baseline)
+        assert result.ok and len(result.stale) == 1
+
+    def test_gate_cli_nonzero_per_fixture_class(self, tmp_path, capsys):
+        empty = str(tmp_path / "missing.json")
+        rc_retrace = main([str(FIXTURES / "retrace_bad.py"),
+                           "--passes", "retrace", "--gate",
+                           "--baseline", empty])
+        rc_conc = main([str(FIXTURES / "concurrency_bad.py"),
+                        "--passes", "concurrency", "--gate",
+                        "--baseline", empty])
+        capsys.readouterr()
+        assert rc_retrace == 1 and rc_conc == 1
+
+    def test_gate_cli_kernel_fixture_nonzero(self, tmp_path, capsys,
+                                             monkeypatch):
+        monkeypatch.syspath_prepend(str(FIXTURES))
+        rc = main(["--passes", "kernels",
+                   "--kernels-from", "kernel_fixture_mod",
+                   "--gate", "--baseline", str(tmp_path / "missing.json"),
+                   str(FIXTURES)])
+        capsys.readouterr()
+        assert rc == 1
+
+    def test_write_baseline_refuses_to_grow(self, tmp_path, capsys):
+        path = tmp_path / "baseline.json"
+        fmod.save_baseline(path, {})
+        rc = main([str(FIXTURES / "retrace_bad.py"), "--passes", "retrace",
+                   "--write-baseline", "--baseline", str(path)])
+        capsys.readouterr()
+        assert rc == 1
+        assert fmod.load_baseline(path) == {}
+        rc = main([str(FIXTURES / "retrace_bad.py"), "--passes", "retrace",
+                   "--write-baseline", "--allow-grow",
+                   "--baseline", str(path)])
+        capsys.readouterr()
+        assert rc == 0 and fmod.load_baseline(path)
+
+
+# ----------------------------------------------------------- self-check ----
+class TestShippedTree:
+    def test_repo_scan_matches_committed_baseline(self, capsys):
+        """The tree as shipped gates clean: AST passes over src/repro
+        against ANALYSIS_BASELINE.json (kernels covered separately above)."""
+        rc = main([str(DEFAULT_SCAN), "--passes", "retrace,concurrency",
+                   "--gate"])
+        out = capsys.readouterr().out
+        assert rc == 0, out
+
+    def test_baseline_is_empty_for_tier1_paths(self):
+        baseline = fmod.load_baseline(DEFAULT_BASELINE)
+        tier1 = ("src/repro/core/", "src/repro/kernels/",
+                 "src/repro/embed/", "src/repro/serve/")
+        offending = [fp for fp, meta in baseline.items()
+                     if meta["path"].startswith(tier1)]
+        assert offending == []
+
+    def test_committed_baseline_parses(self):
+        doc = json.loads(DEFAULT_BASELINE.read_text())
+        assert doc["version"] == 1

@@ -1,0 +1,49 @@
+"""Numerics sanitizers over a real (small) fit.
+
+The static passes in ``repro.analysis`` catch structural hazards; this
+test catches the numeric ones the same way ASAN catches memory bugs —
+run the pipeline with every tripwire armed:
+
+* ``jax_debug_nans`` — any NaN produced inside a jitted computation
+  re-raises at the producing primitive (a silent NaN in the perplexity
+  search or gradient would otherwise just propagate into the embedding);
+* ``jax_numpy_rank_promotion='raise'`` — implicit broadcasting across
+  ranks is an error (the classic source of silently-wrong reductions in
+  [N, K]-vs-[N] arithmetic).
+
+Slow-marked: the sanitizers force per-primitive checks, so the fit runs
+well off the fast path.
+"""
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+
+
+def make_points(n, seed=0, clusters=4, dim=8, std=0.2):
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(size=(clusters, dim)) * 3.0
+    lab = rng.integers(0, clusters, size=n)
+    return (centers[lab] + rng.normal(size=(n, dim)) * std).astype(np.float32)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("method", ["exact", "barnes_hut", "fft"])
+def test_fit_under_sanitizers(method):
+    from repro.api import TSNE
+
+    x = make_points(192, seed=7, clusters=3)
+    prev_nans = jax.config.jax_debug_nans
+    prev_rank = jax.config.jax_numpy_rank_promotion
+    jax.config.update("jax_debug_nans", True)
+    jax.config.update("jax_numpy_rank_promotion", "raise")
+    try:
+        est = TSNE(method=method, perplexity=10.0, n_iter=60, kl_every=30,
+                   random_state=0)
+        emb = est.fit_transform(x)
+    finally:
+        jax.config.update("jax_debug_nans", prev_nans)
+        jax.config.update("jax_numpy_rank_promotion", prev_rank)
+    assert emb.shape == (192, 2)
+    assert np.isfinite(emb).all()
+    assert np.isfinite(est.kl_divergence_)
