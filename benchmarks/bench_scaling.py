@@ -9,16 +9,26 @@ the two *algorithmic* scaling claims that core scaling rests on:
   3. device-count scaling of the distributed step is exercised functionally
      in tests/test_distributed.py (emulated devices share this one core, so
      wall-clock parallel efficiency is not meaningful here).
+
+:func:`run_large` (``benchmarks.run --bench scaling --large``, slow-gated —
+never part of the quick CI pass) extends the trajectory past the historical
+32k ceiling: it drives the *fused* million-point pipeline — sharded
+approximate KNN + chunked BSP/symmetrization + gradient steps — at
+100k/500k/1M points, emitting per-phase rows and peak-RSS through
+``benchmarks.common`` so the large-N exponent lands in the ``BENCH_<n>.json``
+artifact trajectory instead of only stdout.
 """
 from __future__ import annotations
 
 import functools
+import resource
+import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import build_tree, emit, time_fn
+from benchmarks.common import build_tree, emit, record_phases, time_fn
 from repro.core import exact
 from repro.core.repulsive import bh_repulsion_sorted
 from repro.core.summarize import summarize
@@ -67,3 +77,72 @@ def run(sizes=(2000, 4000, 8000, 16000, 32000), exact_cap: int = 8000):
     # traversal growth ~ log N: ratio of means across a 16x N range
     emit("scaling_traversal_growth", 0.0,
          f"mean_traversal {trav[0]:.0f} -> {trav[-1]:.0f} over {sizes[0]}->{sizes[-1]} pts")
+
+
+def _peak_rss_mb() -> float:
+    return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+
+
+def run_large(
+    sizes=(100_000, 500_000, 1_000_000),
+    *,
+    n_steps: int = 5,
+    chunk_size: int = 100_000,
+    method: str = "fft",
+    perplexity: float = 30.0,
+):
+    """Fused large-N pipeline: sharded KNN + chunked preprocess + GD steps.
+
+    One preprocessing pass and ``n_steps`` timed gradient iterations per
+    size, on the memory-bounded path (``neighbor_method='sharded'`` +
+    ``chunk_size``).  Emits per-phase rows, peak-RSS, and the fitted
+    step-time exponent over the large range — directly comparable against
+    ``scaling_bh_exponent`` from the <=32k ladder.
+    """
+    from repro.api import make_backend
+    from repro.core.tsne import TsneConfig, init_state, preprocess, tsne_step
+    from repro.data.datasets import make_dataset
+
+    step_times = []
+    for n in sizes:
+        cfg = TsneConfig(
+            perplexity=perplexity, neighbor_method="sharded",
+            chunk_size=chunk_size, method=method,
+        )
+        x, _ = make_dataset("mouse_1p3m", n=n)
+        t0 = time.perf_counter()
+        graph, timings = preprocess(jnp.asarray(x), cfg)
+        pre_s = time.perf_counter() - t0
+        emit(f"scaling_large_preprocess_n{n}", pre_s * 1e6,
+             f"knn={timings['knn']:.1f}s bsp={timings['bsp']:.1f}s "
+             f"sym={timings['symmetrize']:.1f}s peak_rss_mb={_peak_rss_mb():.0f}")
+
+        backend = make_backend(cfg.method, cfg, n)
+        state = init_state(n, cfg)
+        lr = cfg.resolve_lr(n)
+        exag = jnp.asarray(cfg.early_exaggeration, jnp.float32)
+        mom = jnp.asarray(cfg.momentum_initial, jnp.float32)
+
+        def one_step(s):
+            new_s, stats = tsne_step(s, graph, exag, mom, backend=backend,
+                                     lr=lr, min_gain=cfg.min_gain)
+            return new_s
+
+        state = one_step(state)                    # compile + warm
+        jax.block_until_ready(state.y)
+        t1 = time.perf_counter()
+        for _ in range(n_steps):
+            state = one_step(state)
+        jax.block_until_ready(state.y)
+        step_s = (time.perf_counter() - t1) / n_steps
+        step_times.append(step_s)
+        emit(f"scaling_large_step_n{n}", step_s * 1e6,
+             f"method={method} peak_rss_mb={_peak_rss_mb():.0f}")
+        timings["gradient_descent"] = step_s * n_steps
+        record_phases(f"scaling_large_n{n}", timings)
+
+    if len(sizes) >= 2:
+        ln = np.log(np.asarray(sizes, np.float64))
+        slope = np.polyfit(ln, np.log(step_times), 1)[0]
+        emit("scaling_large_step_exponent", 0.0,
+             f"t ~ N^{slope:.2f} over {sizes[0]}..{sizes[-1]} (target ~1)")

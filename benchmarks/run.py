@@ -1,7 +1,7 @@
 """Benchmark harness — one bench per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--bench steps,e2e,accuracy,scaling,knn]
-                                            [--quick] [--n N] [--scale S]
+                                            [--quick] [--large] [--n N] [--scale S]
                                             [--out-dir DIR | --no-json]
                                             [--trace [PATH]]
                                             [--compare PREV.json]
@@ -46,6 +46,10 @@ def main() -> None:
     ap.add_argument("--bench", default=",".join(KNOWN_BENCHES),
                     help=f"comma-separated subset of {', '.join(KNOWN_BENCHES)}")
     ap.add_argument("--quick", action="store_true", help="small sizes (CI)")
+    ap.add_argument("--large", action="store_true",
+                    help="scaling bench only: drive the fused sharded+chunked "
+                         "pipeline at 100k/500k/1M points (slow — minutes to "
+                         "hours; never part of --quick CI)")
     ap.add_argument("--n", type=int, default=None, help="points for step bench")
     ap.add_argument("--scale", type=float, default=None, help="e2e dataset scale")
     ap.add_argument("--out-dir", default=str(REPO_ROOT),
@@ -92,6 +96,10 @@ def main() -> None:
         from benchmarks import bench_scaling
         sizes = (1000, 2000, 4000) if args.quick else (2000, 4000, 8000, 16000, 32000)
         bench_scaling.run(sizes=sizes, exact_cap=2000 if args.quick else 8000)
+        if args.large and not args.quick:
+            bench_scaling.run_large()
+        elif args.large:
+            print("# --large ignored under --quick", file=sys.stderr)
     if "e2e" in benches:
         from benchmarks import bench_e2e
         bench_e2e.run(n_iter=60 if args.quick else 250,

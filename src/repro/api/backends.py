@@ -52,7 +52,8 @@ class GradientBackend(Protocol):
 # Shared attractive-term dispatch (exaggeration-free; callers scale it)
 # --------------------------------------------------------------------------
 
-def _attractive(y, graph: NeighborGraph, attractive_impl: str):
+def _attractive(y, graph: NeighborGraph, attractive_impl: str,
+                attractive_block: int = 512):
     if attractive_impl == "edges":
         if not graph.has_edges:
             raise ValueError(
@@ -65,6 +66,10 @@ def _attractive(y, graph: NeighborGraph, attractive_impl: str):
             f"attractive_impl={attractive_impl!r} needs the ELL rows, but this "
             "NeighborGraph was preprocessed edges-only "
             "(attractive_impl='edges')"
+        )
+    if attractive_impl == "blocked":
+        return attractive.attractive_forces_ell_blocked(
+            y, graph.p_cols, graph.p_vals, block=attractive_block
         )
     return attractive.ell_impl(attractive_impl)(y, graph.p_cols, graph.p_vals)
 
@@ -105,6 +110,10 @@ class BarnesHutBackend:
     compress_tree: bool = True
     use_pallas: bool = False
     attractive_impl: str = DEFAULT_ATTRACTIVE_IMPL
+    # row block of the 'blocked' attractive variant — follows
+    # TsneConfig.resolve_attractive_block() so the preprocessing chunk_size
+    # also bounds the gradient-side gather transients
+    attractive_block: int = 512
 
     def gradient(self, y, graph: NeighborGraph, exaggeration) -> GradResult:
         if self.attractive_impl == "edges" and not graph.has_edges:
@@ -123,6 +132,7 @@ class BarnesHutBackend:
             self.theta, exaggeration, self.depth, graph.p_logp,
             compress_tree=self.compress_tree, use_pallas=self.use_pallas,
             attractive_impl=self.attractive_impl,
+            attractive_block=self.attractive_block,
         )
 
 
@@ -139,9 +149,11 @@ class FFTBackend:
     n_boxes: int = 48
     attractive_impl: str = DEFAULT_ATTRACTIVE_IMPL
     interp_impl: str = "xla"
+    attractive_block: int = 512
 
     def gradient(self, y, graph: NeighborGraph, exaggeration) -> GradResult:
-        f_attr, kl_attr = _attractive(y, graph, self.attractive_impl)
+        f_attr, kl_attr = _attractive(y, graph, self.attractive_impl,
+                                      self.attractive_block)
         f_rep_unnorm, z = fft_repulsion(y, n_boxes=self.n_boxes,
                                         interp_impl=self.interp_impl)
         return combine_forces(f_attr, kl_attr, f_rep_unnorm, z, exaggeration,
@@ -208,6 +220,7 @@ def _make_barnes_hut(config: TsneConfig, n: int) -> BarnesHutBackend:
         compress_tree=config.compress_tree,
         use_pallas=config.use_pallas,
         attractive_impl=config.attractive_impl,
+        attractive_block=config.resolve_attractive_block(),
     )
 
 
@@ -215,4 +228,5 @@ def _make_barnes_hut(config: TsneConfig, n: int) -> BarnesHutBackend:
 def _make_fft(config: TsneConfig, n: int) -> FFTBackend:
     return FFTBackend(n_boxes=config.fft_n_boxes,
                       attractive_impl=config.attractive_impl,
-                      interp_impl=config.resolve_fft_interp_impl())
+                      interp_impl=config.resolve_fft_interp_impl(),
+                      attractive_block=config.resolve_attractive_block())

@@ -99,6 +99,47 @@ def _binary_search_perplexity_xla(
     return cond_p, (beta / scale)[:, 0]
 
 
+def binary_search_perplexity_chunked(
+    d2: jax.Array,
+    perplexity: float,
+    chunk_size: int,
+    iters: int = 64,
+    tol: float = 1e-5,
+    impl: str = "xla",
+):
+    """Row-chunked :func:`binary_search_perplexity` — the million-point form.
+
+    The bisection is independent per row (every reduction in the search is
+    a row reduction), so chunking over the point axis is exact: each
+    ``[chunk_size, K]`` slice runs the full search and results are
+    concatenated.  Live transients are bounded by the chunk — the whole-
+    array form keeps several ``[N, K]`` temporaries per bisection step —
+    and every chunk reuses one compiled program: the last, non-dividing
+    chunk is padded back up to ``chunk_size`` (pad rows cost compute but
+    are sliced off, and a retrace per ragged tail shape is avoided).
+
+    Matches the unchunked search to float tolerance for every chunk size
+    (parity-tested in tests/test_chunked.py).
+    """
+    chunk = int(chunk_size)
+    if chunk <= 0:
+        raise ValueError(f"chunk_size={chunk_size} must be >= 1")
+    n = d2.shape[0]
+    if chunk >= n:
+        return binary_search_perplexity(d2, perplexity, iters, tol, impl)
+    ps, betas = [], []
+    for start in range(0, n, chunk):
+        blk = jax.lax.dynamic_slice_in_dim(d2, start, min(chunk, n - start))
+        pad = chunk - blk.shape[0]
+        if pad:
+            # pad rows of ones: a flat row whose search converges instantly
+            blk = jnp.pad(blk, ((0, pad), (0, 0)), constant_values=1.0)
+        cp, beta = binary_search_perplexity(blk, perplexity, iters, tol, impl)
+        ps.append(cp[: chunk - pad])
+        betas.append(beta[: chunk - pad])
+    return jnp.concatenate(ps, axis=0), jnp.concatenate(betas, axis=0)
+
+
 def perplexity_of(cond_p: jax.Array) -> jax.Array:
     """exp(H) of each row — used by tests to verify the search converged."""
     h = -jnp.sum(jnp.where(cond_p > 0, cond_p * jnp.log(jnp.maximum(cond_p, 1e-30)), 0.0), axis=1)

@@ -7,9 +7,21 @@ traverses only its own point slice — the multi-device generalization of the
 paper's thread-parallel repulsion, with the same attractive/BSP row
 parallelism.  Z and the KL terms are psum'd.
 
-The KNN is a collective_permute ring: each shard keeps its query slice and
-streams database shards around the ring, merging running top-k per hop —
-the transfer of hop t+1 overlaps the distance matmul of hop t.
+Two KNN rings live here:
+
+* :func:`ring_knn` — the *exact* oracle: each shard keeps its query slice
+  and streams database shards around the ring, merging running top-k per
+  hop — the transfer of hop t+1 overlaps the distance matmul of hop t.
+  O(N²/S · D) compute per shard; the recall reference.
+* :func:`ring_knn_approx` — the scalable path: every shard builds an
+  rp-tree forest over its *local* points only, and the ring streams the
+  (query block, running global top-k) state instead of database shards.
+  At each hop the hosting shard routes the visiting queries down its own
+  resident forest, scores just the ``n_trees * leaf_size`` leaf candidates
+  exactly, and folds them into the traveling top-k with *global* indices.
+  Per-hop compute is O(n_loc · T·leaf · D) — the N²/S distance tile is
+  gone — and every merge is row-blocked (``block_rows``), so peak memory
+  is bounded by the block size, not the shard size.
 """
 from __future__ import annotations
 
@@ -112,14 +124,16 @@ def distributed_bh_gradient(mesh, y, p_cols, p_vals, p_logp, *,
 # ring KNN
 # ---------------------------------------------------------------------------
 
-def ring_knn(mesh, x, k: int, axis: str = "data"):
+def ring_knn(mesh, x, k: int, axis: str = "data", *, n_valid: int | None = None):
     """Exact distributed KNN: x [N, D] sharded row-wise over ``axis``.
 
     Returns (idx [N,k] int32 global indices, d2 [N,k]), sharded like x.
     Each hop overlaps the next shard transfer (collective_permute) with the
-    current distance tile (MXU matmul + top-k merge).
+    current distance tile (MXU matmul + top-k merge).  Rows >= ``n_valid``
+    (default: all rows are valid) are padding — never emitted as neighbors.
     """
     n_dev = mesh.shape[axis]
+    n_total = x.shape[0] if n_valid is None else int(n_valid)
 
     def body(xq):
         n_loc = xq.shape[0]
@@ -135,7 +149,8 @@ def ring_knn(mesh, x, k: int, axis: str = "data"):
             nxt_owner = (owner - 1) % n_dev
             d2 = pairwise_sq_dists(xq, chunk)
             col = owner * n_loc + jnp.arange(n_loc, dtype=jnp.int32)
-            d2 = jnp.where(col[None, :] == q_idx[:, None], big, d2)
+            mask = (col[None, :] == q_idx[:, None]) | (col[None, :] >= n_total)
+            d2 = jnp.where(mask, big, d2)
             cat_d = jnp.concatenate([best_d, d2], axis=1)
             cat_i = jnp.concatenate(
                 [best_i, jnp.broadcast_to(col[None, :], d2.shape)], axis=1)
@@ -146,6 +161,119 @@ def ring_knn(mesh, x, k: int, axis: str = "data"):
                 jnp.full((n_loc, k), -1, jnp.int32))
         (chunk, _, best_d, best_i), _ = jax.lax.scan(hop, init, jnp.arange(n_dev))
         return best_i, jnp.maximum(best_d, 0.0)
+
+    return shard_map(body, mesh=mesh, in_specs=P(axis),
+                     out_specs=(P(axis), P(axis)), check_vma=False)(x)
+
+
+# ---------------------------------------------------------------------------
+# approximate candidate ring (sharded rp_forest)
+# ---------------------------------------------------------------------------
+
+def ring_knn_approx(
+    mesh, x, k: int, axis: str = "data", *,
+    n_valid: int | None = None,
+    n_trees: int = 8,
+    leaf_size: int = 64,
+    block_rows: int = 4096,
+    seed: int = 0,
+):
+    """Sharded approximate KNN: per-shard rp_forest + candidate ring.
+
+    x [N, D] sharded row-wise over ``axis`` (N divisible by the axis size;
+    rows >= ``n_valid`` are padding — they are scored as queries but their
+    global indices are never emitted as neighbors).  Returns
+    ``(idx [N, k] int32 global indices, d2 [N, k])``, sharded like x.
+
+    Memory model: resident per shard is the local forest
+    (``n_trees * [2^depth, leaf]`` int32 + thresholds) and the traveling
+    state ``[n_loc, D + 2k]``; every hop's routing/scoring/merge runs over
+    ``block_rows``-row slices (lax.map), so transients are
+    O(block_rows * (n_trees*leaf_size + k)) regardless of N or shard size.
+    Each query visits all S shards once (S hops) and comes home with the
+    merged global top-k; a per-hop seed block (the host shard's first k+1
+    points) guarantees k distinct valid indices even if forest candidates
+    collapse to duplicates.
+    """
+    import math as _math
+
+    from repro.neighbors.rp_forest import build_forest_index, route_to_leaves
+    from repro.neighbors._candidates import candidate_sq_dists, merge_topk
+
+    n_dev = mesh.shape[axis]
+    n_pad_total, _ = x.shape
+    if n_pad_total % n_dev:
+        raise ValueError(f"N={n_pad_total} not divisible by {n_dev} shards")
+    n_total = n_pad_total if n_valid is None else int(n_valid)
+    n_loc = n_pad_total // n_dev
+    if n_loc < k + 1:
+        raise ValueError(
+            f"shard size {n_loc} must exceed k={k}: lower the shard count"
+        )
+    # deepest split keeping leaves >= max(leaf_size, k+1) local points, the
+    # same heuristic as RPForestNeighbors.resolve_depth
+    leaf_floor = max(leaf_size, k + 1)
+    depth = max(0, int(_math.floor(_math.log2(max(1.0, n_loc / leaf_floor)))))
+    leaf = -(-n_loc // (1 << depth))
+    n_pad_loc = leaf << depth
+    n_seed = min(k + 1, n_loc)
+    block = min(block_rows, n_loc)
+    m_pad = -(-n_loc // block) * block
+    perm = [(i, (i + 1) % n_dev) for i in range(n_dev)]
+
+    def body(x_loc):
+        rank = jax.lax.axis_index(axis)
+        big = jnp.asarray(jnp.finfo(x_loc.dtype).max, x_loc.dtype)
+        # decorrelate the per-shard forests: each rank draws its own
+        # hyperplanes (fold by a prime so shard 1's seed never collides
+        # with shard 0's tree-index folds)
+        leaves, dirs, thrs = build_forest_index(
+            x_loc, n_trees, depth, n_pad_loc, seed=seed + rank * 7919
+        )
+        base = rank * n_loc                     # global id of local row 0
+        seed_cols = jnp.arange(n_seed, dtype=jnp.int32)[None, :]
+
+        def merge_block(args):
+            qb, gb, bi, bd = args
+            cand = route_to_leaves(leaves, dirs, thrs, qb)     # local ids
+            cand = jnp.concatenate(
+                [cand, jnp.broadcast_to(seed_cols, (qb.shape[0], n_seed))],
+                axis=1,
+            )
+            cd = candidate_sq_dists(x_loc, cand, block_rows=block, q=qb)
+            # leaf pads (>= n_loc) and global pads (>= n_total) must never
+            # escape as neighbor ids; -1 is dropped by merge_topk
+            cand_g = jnp.where(cand < n_loc, base + cand, -1)
+            cand_g = jnp.where(cand_g < n_total, cand_g, -1)
+            cd = jnp.where(cand_g == gb[:, None], big, cd)     # self edge
+            return merge_topk(bi, bd, cand_g, cd, k, n_total,
+                              exclude_self=False)
+
+        def hop(carry, _):
+            q, gid, bi, bd = carry
+            nb = m_pad // block
+            blk = lambda a: a.reshape(nb, block, *a.shape[1:])
+            mi, md = jax.lax.map(
+                merge_block, (blk(q), blk(gid), blk(bi), blk(bd))
+            )
+            bi = mi.reshape(m_pad, k)
+            bd = md.reshape(m_pad, k)
+            # merged state travels on to the next shard's forest
+            out = tuple(jax.lax.ppermute(a, axis, perm)
+                        for a in (q, gid, bi, bd))
+            return out, None
+
+        gid = base + jnp.arange(n_loc, dtype=jnp.int32)
+        pad = m_pad - n_loc
+        q0 = jnp.pad(x_loc, ((0, pad), (0, 0)))
+        gid0 = jnp.pad(gid, (0, pad), constant_values=-1)
+        init = (
+            q0, gid0,
+            jnp.full((m_pad, k), -1, jnp.int32),
+            jnp.full((m_pad, k), big, x_loc.dtype),
+        )
+        (q, gid, bi, bd), _ = jax.lax.scan(hop, init, None, length=n_dev)
+        return bi[:n_loc], jnp.maximum(bd[:n_loc], 0.0)
 
     return shard_map(body, mesh=mesh, in_specs=P(axis),
                      out_specs=(P(axis), P(axis)), check_vma=False)(x)

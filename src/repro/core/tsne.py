@@ -70,6 +70,13 @@ class TsneConfig:
     neighbor_options: Mapping[str, Any] | tuple | None = None
     knn_block_q: int = 512
     knn_block_db: int = 2048
+    # rows per preprocessing slice: the BSP search and the ELL
+    # symmetrization stream over [chunk_size, K] blocks instead of whole
+    # [N, K] passes (None = unchunked).  The memory knob for million-point
+    # runs — peak preprocessing transients are O(chunk_size * K).
+    chunk_size: int | None = None
+    # device count for the 'sharded' neighbor backend (None = all visible)
+    knn_shards: int | None = None
     use_pallas: bool = False              # route hot loops through Pallas kernels
     # perplexity-search implementation: 'auto' follows use_pallas;
     # 'xla' | 'pallas' force one (core/bsp.py dispatch)
@@ -110,7 +117,24 @@ class TsneConfig:
             opts.setdefault("pairwise", "pallas" if self.use_pallas else "xla")
         elif self.neighbor_method in ("rp_forest", "nn_descent"):
             opts.setdefault("seed", self.seed)
+        elif self.neighbor_method == "sharded":
+            opts.setdefault("seed", self.seed)
+            opts.setdefault("shards", self.knn_shards)
         return opts
+
+    def resolve_chunk_size(self, n: int) -> int | None:
+        """Preprocessing chunk: None = unchunked, else clamped to [1, n]."""
+        if self.chunk_size is None:
+            return None
+        return max(1, min(int(self.chunk_size), n))
+
+    def resolve_attractive_block(self) -> int:
+        """Gradient-side attractive row block: never exceeds the configured
+        preprocessing chunk, so one knob bounds live transients end-to-end
+        (512 is the measured cache-resident default)."""
+        if self.chunk_size is not None:
+            return max(1, min(512, int(self.chunk_size)))
+        return 512
 
     def resolve_depth(self, n: int) -> int:
         return morton.auto_depth(n) if self.depth == "auto" else int(self.depth)
@@ -198,6 +222,7 @@ def bh_gradient(
     compress_tree: bool = True,
     use_pallas: bool = False,
     attractive_impl: str = DEFAULT_ATTRACTIVE_IMPL,
+    attractive_block: int = 512,
 ) -> GradResult:
     # --- quadtree building (step 3) ---
     cent, r_span = morton.span_radius(y)
@@ -220,6 +245,11 @@ def bh_gradient(
     else:
         if use_pallas:
             from repro.kernels.ops import attractive_forces_ell as attr_ell
+        elif attractive_impl == "blocked":
+            attr_ell = functools.partial(
+                attractive.attractive_forces_ell_blocked,
+                block=attractive_block,
+            )
         else:
             attr_ell = attractive.ell_impl(attractive_impl)
         f_attr, kl_attr = attr_ell(y, p_cols, p_vals)
@@ -320,6 +350,15 @@ def preprocess(
     — the mean selected squared distance, directly comparable against the
     exact backend's value on the same data as a recall proxy.
 
+    With ``config.chunk_size`` set, the perplexity search and the ELL
+    symmetrization stream over ``[chunk_size, K]`` row slices
+    (``bsp.binary_search_perplexity_chunked`` /
+    ``similarity.symmetrize_ell_chunked``) — numerically identical to the
+    whole-array forms, with preprocessing transients bounded by the chunk
+    instead of N.  Pair with ``neighbor_method="sharded"`` for the fully
+    memory-bounded million-point pipeline (docs/ARCHITECTURE.md,
+    "Scaling to 1M+").
+
     Each stage is a span on ``tracer`` (default: the process-global tracer)
     with ``block_until_ready`` sync at exit, and the per-stage seconds in
     the timings dict are those spans' durations — one timing source for
@@ -340,13 +379,21 @@ def preprocess(
         sp_knn.sync((idx, d2))
 
     bsp_impl = config.resolve_bsp_impl()
-    with timer.span("bsp", perplexity=config.perplexity, impl=bsp_impl) as sp_bsp:
-        cond_p, _ = bsp.binary_search_perplexity(
-            d2, config.perplexity, impl=bsp_impl
-        )
+    chunk = config.resolve_chunk_size(int(x.shape[0]))
+    with timer.span("bsp", perplexity=config.perplexity, impl=bsp_impl,
+                    chunk_size=chunk) as sp_bsp:
+        if chunk is not None:
+            cond_p, _ = bsp.binary_search_perplexity_chunked(
+                d2, config.perplexity, chunk, impl=bsp_impl
+            )
+        else:
+            cond_p, _ = bsp.binary_search_perplexity(
+                d2, config.perplexity, impl=bsp_impl
+            )
         sp_bsp.sync(cond_p)
 
-    sp_sym_ctx = timer.span("symmetrize", layout=config.attractive_impl)
+    sp_sym_ctx = timer.span("symmetrize", layout=config.attractive_impl,
+                            chunk_size=chunk)
     sp_sym = sp_sym_ctx.__enter__()
     n = int(x.shape[0])
     if config.attractive_impl == "edges":
@@ -368,7 +415,12 @@ def preprocess(
         p_cols = jnp.zeros((1, 1), jnp.int32)
         p_vals = jnp.zeros((1, 1), config.dtype)
     else:
-        sym_cols, sym_vals = similarity.symmetrize_ell(idx, cond_p)
+        if chunk is not None:
+            sym_cols, sym_vals = similarity.symmetrize_ell_chunked(
+                idx, cond_p, chunk
+            )
+        else:
+            sym_cols, sym_vals = similarity.symmetrize_ell(idx, cond_p)
         sym_vals = sym_vals / sym_vals.sum()
         pv = np.asarray(sym_vals)
         p_logp = float((pv[pv > 0] * np.log(pv[pv > 0])).sum())
@@ -391,6 +443,7 @@ def preprocess(
         symmetrize=sp_sym.duration_s,
         neighbor_method=nb.name, n_neighbors=k,
         bsp_impl=bsp_impl,
+        chunk_size=chunk,
         knn_mean_d2=float(jnp.mean(d2)),
     )
 

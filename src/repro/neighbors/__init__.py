@@ -3,10 +3,11 @@
     from repro.neighbors import make_neighbor_backend
     idx, d2 = make_neighbor_backend("rp_forest").neighbors(x, k)
 
-Backends ("exact" | "rp_forest" | "nn_descent", or your own via
-:func:`register_neighbor_backend`) plug in behind ``preprocess`` /
+Backends ("exact" | "rp_forest" | "nn_descent" | "sharded", or your own
+via :func:`register_neighbor_backend`) plug in behind ``preprocess`` /
 ``TSNE(neighbor_method=...)`` exactly like gradient backends do behind
-``method=``.
+``method=``.  "sharded" distributes the build over a 1-D device mesh
+(per-shard rp_forest + candidate ring — the million-point path).
 """
 from repro.neighbors.base import (
     NeighborBackend, NeighborIndex, available_neighbor_backends,
@@ -19,11 +20,13 @@ from repro.neighbors.rp_forest import (
     RPForestIndex, RPForestNeighbors, forest_query, rp_forest_knn,
 )
 from repro.neighbors.nn_descent import NNDescentNeighbors, nn_descent_knn
+from repro.neighbors.sharded import ShardedNeighbors
 from repro.neighbors._candidates import merge_topk, seed_graph
 
 __all__ = [
     "NeighborBackend", "NeighborIndex",
     "ExactNeighbors", "RPForestNeighbors", "NNDescentNeighbors",
+    "ShardedNeighbors",
     "ExactIndex", "RPForestIndex",
     "register_neighbor_backend", "unregister_neighbor_backend",
     "available_neighbor_backends", "make_neighbor_backend", "validate_k",

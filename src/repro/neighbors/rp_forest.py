@@ -160,6 +160,33 @@ def build_forest_index(
     )
 
 
+def route_to_leaves(
+    leaves: jax.Array,
+    dirs: jax.Array,
+    thrs: tuple[jax.Array, ...],
+    q: jax.Array,
+) -> jax.Array:
+    """Descend every tree with each query point; gather its leaf's members.
+
+    q [M, D] -> cand [M, n_trees * leaf_size] reference-set indices (entries
+    >= the fitted N are leaf padding the caller must mask).  This is the
+    routing half of :func:`forest_query`, shared with the distributed
+    candidate ring (``core/distributed.ring_knn_approx``) where scoring and
+    merging happen against a remote shard's running top-k.
+    """
+    n_trees, _, leaf_size = leaves.shape
+    depth = dirs.shape[1]
+    m = q.shape[0]
+    tree_ids = jnp.arange(n_trees, dtype=jnp.int32)[None, :]      # [1, T]
+    node = jnp.zeros((m, n_trees), jnp.int32)
+    if depth:
+        proj = jnp.einsum("md,tld->mtl", q, dirs)                 # [M, T, depth]
+        for level in range(depth):
+            thr = thrs[level][tree_ids, node]                     # [M, T]
+            node = node * 2 + (proj[:, :, level] > thr).astype(jnp.int32)
+    return leaves[tree_ids, node].reshape(m, n_trees * leaf_size)
+
+
 @functools.partial(jax.jit, static_argnames=("k", "block_rows"))
 def forest_query(
     x_ref: jax.Array,
@@ -177,17 +204,8 @@ def forest_query(
     distinct indices even if the forest candidates collapse to duplicates.
     """
     n = x_ref.shape[0]
-    n_trees, _, leaf_size = leaves.shape
-    depth = dirs.shape[1]
     m = q.shape[0]
-    tree_ids = jnp.arange(n_trees, dtype=jnp.int32)[None, :]      # [1, T]
-    node = jnp.zeros((m, n_trees), jnp.int32)
-    if depth:
-        proj = jnp.einsum("md,tld->mtl", q, dirs)                 # [M, T, depth]
-        for level in range(depth):
-            thr = thrs[level][tree_ids, node]                     # [M, T]
-            node = node * 2 + (proj[:, :, level] > thr).astype(jnp.int32)
-    cand = leaves[tree_ids, node].reshape(m, n_trees * leaf_size)
+    cand = route_to_leaves(leaves, dirs, thrs, q)
     cd = candidate_sq_dists(x_ref, cand, block_rows=block_rows, q=q)
     base_i = jnp.broadcast_to(jnp.arange(k, dtype=jnp.int32)[None], (m, k))
     base_d = candidate_sq_dists(x_ref, base_i, block_rows=block_rows, q=q)

@@ -1,0 +1,109 @@
+"""Chunked preprocessing parity: the million-point streaming forms must
+match the whole-array references exactly (ISSUE 10 acceptance).
+
+* chunked perplexity search == unchunked for several chunk sizes,
+  including non-dividing ones and chunk > N;
+* chunked (streaming-CSR) symmetrization is *bit-identical* to the
+  host-reference ELL merge;
+* ``preprocess`` with ``chunk_size`` produces the same NeighborGraph as
+  without, and the sharded neighbor backend slots into it on one device.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bsp, similarity
+from repro.core.knn import knn
+from repro.core.tsne import TsneConfig, preprocess
+from repro.data.datasets import make_dataset
+
+N, K, PERP = 900, 31, 10.0
+
+# deliberately includes dividing (300), non-dividing (257, 128), degenerate
+# (1), and over-long (N + 1) chunk sizes
+CHUNKS = (1, 128, 257, 300, N - 1, N + 1)
+
+
+@pytest.fixture(scope="module")
+def graph_inputs():
+    x, _ = make_dataset("digits", n=N)
+    idx, d2 = knn(jnp.asarray(x), K)
+    return x, idx, d2
+
+
+@pytest.mark.parametrize("chunk", CHUNKS)
+def test_chunked_bsp_matches_unchunked(graph_inputs, chunk):
+    _, _, d2 = graph_inputs
+    ref_p, ref_b = bsp.binary_search_perplexity(d2, PERP)
+    cp, cb = bsp.binary_search_perplexity_chunked(d2, PERP, chunk)
+    np.testing.assert_allclose(np.asarray(cp), np.asarray(ref_p),
+                               rtol=1e-6, atol=1e-8)
+    np.testing.assert_allclose(np.asarray(cb), np.asarray(ref_b), rtol=1e-6)
+
+
+def test_chunked_bsp_pallas_impl(graph_inputs):
+    _, _, d2 = graph_inputs
+    ref_p, _ = bsp.binary_search_perplexity(d2, PERP)
+    cp, _ = bsp.binary_search_perplexity_chunked(d2, PERP, 257, impl="pallas")
+    np.testing.assert_allclose(np.asarray(cp), np.asarray(ref_p),
+                               rtol=2e-5, atol=1e-7)
+
+
+def test_chunked_bsp_rejects_bad_chunk(graph_inputs):
+    _, _, d2 = graph_inputs
+    with pytest.raises(ValueError, match="chunk_size"):
+        bsp.binary_search_perplexity_chunked(d2, PERP, 0)
+
+
+@pytest.mark.parametrize("chunk", CHUNKS)
+def test_chunked_symmetrize_bit_identical(graph_inputs, chunk):
+    _, idx, d2 = graph_inputs
+    cond_p, _ = bsp.binary_search_perplexity(d2, PERP)
+    ref_c, ref_v = similarity.symmetrize_ell(idx, np.asarray(cond_p))
+    sc, sv = similarity.symmetrize_ell_chunked(idx, np.asarray(cond_p), chunk)
+    assert sc.shape == ref_c.shape
+    assert (sc == ref_c).all()
+    assert (sv == ref_v).all()
+
+
+def test_preprocess_chunked_matches_unchunked(graph_inputs):
+    x, _, _ = graph_inputs
+    base = dict(perplexity=PERP, neighbor_method="exact")
+    g_ref, _ = preprocess(jnp.asarray(x), TsneConfig(**base))
+    g_chk, timings = preprocess(
+        jnp.asarray(x), TsneConfig(**base, chunk_size=257))
+    assert timings["chunk_size"] == 257
+    np.testing.assert_array_equal(np.asarray(g_chk.p_cols),
+                                  np.asarray(g_ref.p_cols))
+    np.testing.assert_allclose(np.asarray(g_chk.p_vals),
+                               np.asarray(g_ref.p_vals), rtol=1e-7)
+    np.testing.assert_allclose(float(g_chk.p_logp), float(g_ref.p_logp),
+                               rtol=1e-6)
+
+
+def test_sharded_backend_single_device(graph_inputs):
+    """On one device the ring degenerates to a single local forest pass —
+    the registry path must still produce a valid, high-recall graph."""
+    from repro.neighbors import make_neighbor_backend, recall_at_k
+
+    x, ref_idx, _ = graph_inputs
+    nb = make_neighbor_backend(
+        "sharded", dict(shards=1, n_trees=8, leaf_size=32, block_rows=256))
+    idx, d2 = nb.neighbors(jnp.asarray(x), K)
+    ii = np.asarray(idx)
+    assert ii.shape == (N, K)
+    assert ((ii >= 0) & (ii < N)).all()
+    assert (ii != np.arange(N)[:, None]).all()
+    assert all(len(set(r)) == K for r in ii)
+    assert recall_at_k(ref_idx, idx) >= 0.90
+    assert (np.asarray(d2) >= 0).all()
+
+
+def test_sharded_backend_options_validate():
+    from repro.neighbors import make_neighbor_backend
+
+    with pytest.raises(ValueError, match="mode"):
+        make_neighbor_backend("sharded", dict(mode="bogus"))
+    nb = make_neighbor_backend("sharded", dict(shards=64))
+    with pytest.raises(ValueError, match="device"):
+        nb.neighbors(jnp.ones((4096, 4), jnp.float32), 8)

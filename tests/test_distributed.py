@@ -65,6 +65,99 @@ def test_ring_knn_matches_local():
     """)
 
 
+def test_sharded_approx_recall_vs_exact_ring():
+    """ISSUE 10 acceptance: the candidate ring's merged top-k must reach
+    recall@k >= 0.90 against the exact ring oracle at small N."""
+    run_sub("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.neighbors import make_neighbor_backend, recall_at_k
+        rng = np.random.default_rng(7)
+        n, k = 3000, 15
+        x = jnp.asarray(rng.normal(size=(n, 16)).astype(np.float32))
+        exact = make_neighbor_backend("sharded", dict(mode="exact", shards=8))
+        ref_idx, ref_d2 = exact.neighbors(x, k)
+        approx = make_neighbor_backend(
+            "sharded", dict(shards=8, n_trees=8, leaf_size=32, block_rows=256))
+        idx, d2 = approx.neighbors(x, k)
+        ii = np.asarray(idx)
+        assert ii.shape == (n, k)
+        assert ((ii >= 0) & (ii < n)).all(), "pad/ghost index leaked"
+        assert (ii != np.arange(n)[:, None]).all(), "self returned as neighbor"
+        assert all(len(set(r)) == k for r in ii), "duplicate neighbor in a row"
+        r = recall_at_k(ref_idx, idx)
+        assert r >= 0.90, f"recall@{k} = {r:.3f} < 0.90"
+        # exact mode through the same registry entry must agree with itself
+        # across a non-dividing N (zero-pad path)
+        i3, _ = exact.neighbors(x[: n - 1], k)
+        assert np.asarray(i3).shape == (n - 1, k)
+        assert (np.asarray(i3) < n - 1).all()
+        print(f"sharded approx recall OK ({r:.3f})")
+    """)
+
+
+def test_sharded_preprocess_multi_device():
+    """Chunked preprocess on the sharded backend: same graph invariants as
+    the single-device path, across 8 forced devices."""
+    run_sub("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core.tsne import TsneConfig, preprocess
+        rng = np.random.default_rng(11)
+        x = jnp.asarray(rng.normal(size=(2048, 8)).astype(np.float32))
+        cfg = TsneConfig(perplexity=10.0, neighbor_method="sharded",
+                         knn_shards=8, chunk_size=500)
+        graph, timings = preprocess(x, cfg)
+        assert timings["neighbor_method"] == "sharded"
+        assert timings["chunk_size"] == 500
+        vals = np.asarray(graph.p_vals)
+        assert np.isfinite(vals).all() and (vals >= 0).all()
+        np.testing.assert_allclose(vals.sum(), 1.0, rtol=1e-4)
+        print("sharded preprocess OK")
+    """)
+
+
+@pytest.mark.slow
+def test_sharded_pipeline_100k_smoke():
+    """Large-N smoke (CI's post-artifact step): ~100k points end-to-end
+    through the sharded + chunked preprocessing path on 4 forced devices,
+    plus a handful of fft gradient steps."""
+    code = """
+        import time, jax, jax.numpy as jnp, numpy as np
+        from repro.api import make_backend
+        from repro.core.tsne import TsneConfig, init_state, preprocess, tsne_step
+        from repro.data.datasets import make_dataset
+        n = 100_000
+        assert len(jax.devices()) == 4, jax.devices()
+        x, _ = make_dataset("mouse_1p3m", n=n)
+        cfg = TsneConfig(perplexity=30.0, neighbor_method="sharded",
+                         knn_shards=4, chunk_size=25_000, method="fft")
+        graph, timings = preprocess(jnp.asarray(x), cfg)
+        assert timings["neighbor_method"] == "sharded"
+        assert timings["chunk_size"] == 25_000
+        cols = np.asarray(graph.p_cols)
+        assert ((cols >= 0) & (cols < n)).all()
+        vals = np.asarray(graph.p_vals)
+        assert np.isfinite(vals).all()
+        np.testing.assert_allclose(vals.sum(), 1.0, rtol=1e-4)
+        backend = make_backend(cfg.method, cfg, n)
+        state = init_state(n, cfg)
+        for _ in range(3):
+            state, stats = tsne_step(
+                state, graph, jnp.asarray(12.0, jnp.float32),
+                jnp.asarray(0.5, jnp.float32), backend=backend,
+                lr=cfg.resolve_lr(n), min_gain=cfg.min_gain)
+        assert np.isfinite(np.asarray(state.y)).all()
+        assert np.isfinite(float(stats.kl))
+        print(f"100k smoke OK  knn={timings['knn']:.0f}s "
+              f"bsp={timings['bsp']:.0f}s sym={timings['symmetrize']:.0f}s")
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env, timeout=3600)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr[-4000:]}"
+
+
 def test_compressed_psum_accuracy():
     run_sub("""
         import jax, jax.numpy as jnp, numpy as np
